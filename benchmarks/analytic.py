@@ -1,0 +1,102 @@
+"""Analytic FLOP / HBM-byte models per (arch × shape) cell.
+
+``compiled.cost_analysis()`` on the CPU backend visits ``while`` (scan)
+bodies once, so HLO FLOPs/bytes under-count layer-scanned models by ~L×.
+The roofline therefore uses ``max(HLO, analytic)`` per term and reports both
+(the HLO value stays as the per-iteration diagnostic; the collective term is
+parsed from HLO with explicit trip-count scaling and needs no correction).
+
+These are standard MFU-style napkin models:
+  * matmul FLOPs: 6·N_active·tokens for training, 2·N_active·tokens for
+    inference (N counts matmul-visible params);
+  * attention FLOPs: 2 matmuls of [S, hd]x[hd, S] per head per layer (causal
+    -> /2), windowed for hybrid, none for ssm;
+  * HBM bytes: parameter reads (x3 for train fwd/bwd/update + optimizer
+    state), activation traffic under per-layer remat, KV-cache streaming for
+    decode.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+BF16 = 2
+F32 = 4
+
+
+def _attn_layers(cfg) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return max(cfg.n_layers // cfg.attn_every, 1)
+    if cfg.family == "encdec":
+        return cfg.enc_layers + 2 * cfg.dec_layers   # self + cross
+    return cfg.n_layers
+
+
+def analytic_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    n_act = cfg.active_params()
+    hq, hd = cfg.n_heads, cfg.hd
+    la = _attn_layers(cfg)
+
+    if shape.kind == "train":
+        tokens = b * s
+        attn_ctx = min(s, cfg.window) if cfg.family == "hybrid" else s
+        attn = 4 * la * b * s * (attn_ctx / 2) * hq * hd
+        return 6 * n_act * tokens + 3 * attn
+    if shape.kind == "prefill":
+        tokens = b * s
+        attn_ctx = min(s, cfg.window) if cfg.family == "hybrid" else s
+        attn = 4 * la * b * s * (attn_ctx / 2) * hq * hd
+        return 2 * n_act * tokens + attn
+    # decode: one token per sequence against an S-long cache
+    ctx = min(s, cfg.window) if cfg.family == "hybrid" else s
+    if cfg.family == "ssm":
+        attn = 0.0
+    else:
+        attn = 4 * la * b * ctx * hq * hd
+    return 2 * n_act * b + attn
+
+
+def analytic_bytes(arch: str, shape_name: str) -> float:
+    """Global HBM traffic per step (all chips combined)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    p_total = cfg.n_params()
+    p_active = cfg.active_params()
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        tokens = b * s
+        # params: fwd read + bwd read + grad write + update write (bf16)
+        param_traffic = 4 * p_total * BF16
+        # optimizer: m, v read+write in f32
+        opt_traffic = 4 * p_total * F32
+        # activations under per-layer remat: ~2 saves + 2 reads of [T, d]
+        act_traffic = 4 * cfg.n_layers * tokens * d * BF16
+        return param_traffic + opt_traffic + act_traffic
+    if shape.kind == "prefill":
+        tokens = b * s
+        act = 2 * cfg.n_layers * tokens * d * BF16
+        kv_write = 2 * _cache_bytes(cfg, b, s)
+        return p_active * BF16 + act + kv_write
+    # decode: stream weights + the whole cache once per token
+    return p_active * BF16 + _cache_bytes(cfg, b, s)
+
+
+def _cache_bytes(cfg, b: int, s: int) -> float:
+    if cfg.family == "ssm":
+        return b * cfg.n_layers * cfg.d_inner * cfg.d_state * F32
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        n_rec = cfg.n_layers - n_attn
+        kv = 2 * n_attn * b * cfg.n_kv_heads * min(s, cfg.window) \
+            * cfg.hd * BF16
+        rec = n_rec * b * cfg.rnn_width * F32
+        return kv + rec
+    layers = cfg.dec_layers if cfg.family == "encdec" else cfg.n_layers
+    return 2 * layers * b * cfg.n_kv_heads * s * cfg.hd * BF16

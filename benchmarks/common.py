@@ -1,0 +1,82 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps import ALL_APPS
+from repro.core.compiler import CompileOptions, compile_program
+from repro.core.golden import Golden
+from repro.core.machine import MachineParams, map_graph, scale_outer_parallelism
+from repro.core.vector_vm import VectorVM, MACHINE_LANES
+
+APP_ORDER_FIG12 = ["isipv4", "ip2int", "murmur3", "hash_table", "search",
+                   "huff_dec", "huff_enc", "kdtree"]
+
+# benchmark-scale app instances (larger than the unit-test defaults)
+BENCH_SIZES = {
+    "isipv4": dict(n_strings=256),
+    "ip2int": dict(n_strings=256),
+    "murmur3": dict(n_blobs=128),
+    "hash_table": dict(n_lookups=256, n_slots=1024),
+    "search": dict(n_chunks=32, chunk=256),
+    "huff_dec": dict(n_threads=16, syms_per_thread=128),
+    "huff_enc": dict(n_threads=16, syms_per_thread=128),
+    "kdtree": dict(n_points=2048, n_queries=64),
+    "strlen": dict(n_strings=128, avg_len=32),
+}
+
+
+def build_bench_app(name: str):
+    return ALL_APPS[name](**BENCH_SIZES.get(name, {}))
+
+
+def run_vector_vm(app, opts: CompileOptions | None = None,
+                  check: bool = True, **vm_kw):
+    res = compile_program(app.prog, opts)
+    vm = VectorVM(res.dfg, app.dram_init, **vm_kw)
+    t0 = time.perf_counter()
+    out = vm.run(**app.params)
+    dt = time.perf_counter() - t0
+    if check:
+        for k, want in app.expected.items():
+            got = np.asarray(out[k])[: len(want)]
+            np.testing.assert_array_equal(got, want,
+                                          err_msg=f"{app.name}:{k}")
+    return res, vm, dt
+
+
+def simt_cost(app) -> dict:
+    """SIMT-style lockstep cost model from golden per-thread profiles.
+
+    Warps of 32 threads execute in lockstep: a warp's cost is the max of its
+    threads' dynamic instruction counts (divergent threads occupy issue slots
+    they don't use — the architectural gap Revet closes, §VI-B(b))."""
+    g = Golden(app.prog.ir, app.dram_init)
+    g.run(**app.params)
+    prof = g.thread_profile
+    if not prof:
+        return {"efficiency": 1.0, "useful": 0, "issued": 0}
+    stmts = np.array([p[0] for p in prof], dtype=np.float64)
+    warp = 32
+    pad = (-len(stmts)) % warp
+    if pad:
+        stmts = np.concatenate([stmts, np.zeros(pad)])
+    warps = stmts.reshape(-1, warp)
+    issued = float(warps.max(axis=1).sum() * warp)
+    useful = float(stmts.sum())
+    return {"efficiency": useful / max(issued, 1),
+            "useful": useful, "issued": issued,
+            "threads": len(prof)}
+
+
+def vrda_throughput(app, vm: VectorVM, freq_ghz: float = 1.6) -> dict:
+    """Cycle-approximate GB/s from the VectorVM cost model (Table V analog)."""
+    cycles = vm.estimated_cycles()
+    seconds = cycles / (freq_ghz * 1e9) if cycles else float("inf")
+    return {
+        "cycles": cycles,
+        "gb_s": app.bytes_processed / seconds / 1e9 if cycles else 0.0,
+        "lane_occupancy": vm.lane_occupancy(),
+    }

@@ -1,0 +1,126 @@
+"""Paper-figure benchmarks: Fig. 12 (optimization ablations), Fig. 13
+(hierarchy removal), Fig. 14 (allocator load balancing)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.apps import ALL_APPS
+from repro.core.compiler import CompileOptions, compile_program
+from repro.core.machine import MachineParams, map_graph
+from repro.core.vector_vm import VectorVM
+
+from .common import APP_ORDER_FIG12, build_bench_app, run_vector_vm
+
+
+def fig12_opt_ablations(rows: list[dict]) -> None:
+    """Resource increase (CU+MU) when turning each optimization pass off
+    (Fig. 12). Results are ratios vs the fully-optimized build."""
+    variants = {
+        "baseline": CompileOptions(),
+        "no_if_conv": CompileOptions(if_to_select=False),
+        "no_buffer": CompileOptions(hoist_allocators=False),
+        "no_pack": CompileOptions(subword_packing=False),
+        "no_fuse": CompileOptions(fuse_allocations=False),
+    }
+    for name in APP_ORDER_FIG12:
+        app = build_bench_app(name)
+        base = None
+        for vname, opts in variants.items():
+            res = compile_program(app.prog, opts)
+            rep = map_graph(res.dfg, res.widths,
+                            packing=opts.subword_packing)
+            cu_mu = rep.cu + rep.mu
+            if vname == "baseline":
+                base = cu_mu
+            rows.append({
+                "bench": "fig12", "name": name, "variant": vname,
+                "CU": rep.cu, "MU": rep.mu,
+                "cu_mu_ratio": round(cu_mu / max(base, 1), 3),
+            })
+
+
+def fig13_hierarchy_removal(rows: list[dict]) -> None:
+    """Hierarchy removal (foreach -> fork) lets small tiles coexist in the
+    pipeline: compare cycles + resources with/without the rewrite on the
+    strlen pipeline (the paper's murmur3 case study shape, Fig. 13)."""
+    from repro.apps import strlen as strlen_mod
+    for elim in (True, False):
+        app = strlen_mod.build(n_strings=128, avg_len=32, tile=16)
+        opts = CompileOptions(eliminate_hierarchy=elim)
+        res, vm, dt = run_vector_vm(app, opts)
+        rep = map_graph(res.dfg, res.widths)
+        rows.append({
+            "bench": "fig13", "name": "strlen",
+            "variant": "fork" if elim else "hierarchical",
+            "cycles": vm.estimated_cycles(),
+            "CU": rep.cu, "MU": rep.mu,
+            "lane_occupancy": round(vm.lane_occupancy(), 3),
+            "ticks": vm.stats["ticks"],
+        })
+
+
+def fig14_load_balance(rows: list[dict]) -> None:
+    """Allocator-driven load balancing (Fig. 14): with a hoisted allocator,
+    a replicate region running 2x slower receives proportionally less work
+    (freeing buffers is what admits new threads); the round-robin baseline
+    assigns work evenly and stalls on the slow region."""
+    from repro.core.compiler import compile_program
+    from repro.apps import ip
+
+    for hoist in (True, False):
+        for n_inputs in (32, 128, 256):
+            app = ip.build_isipv4(n_strings=n_inputs, replicate=4)
+            opts = CompileOptions(hoist_allocators=hoist)
+            res = compile_program(app.prog, opts)
+            # throttle replicate region 0 to 1/4 lane throughput
+            vm = VectorVM(res.dfg, app.dram_init,
+                          pool_override=_small_pools(res.dfg, 8))
+            _throttle_region(vm, "rep0", factor=4)
+            out = vm.run(**app.params)
+            shares = _region_shares(vm)
+            rows.append({
+                "bench": "fig14",
+                "variant": "hoisted" if hoist else "round_robin",
+                "inputs": n_inputs,
+                **{f"share_rep{i}": round(s, 3)
+                   for i, s in enumerate(shares)},
+                "cycles": vm.estimated_cycles(),
+                "ticks": vm.stats["ticks"],   # wall-clock proxy incl. stalls
+            })
+
+
+def _small_pools(dfg, n_bufs: int) -> dict:
+    """Small free lists so allocation back-pressure actually engages."""
+    return {name: max(n_bufs, 4) for name in dfg.pools}
+
+
+def _throttle_region(vm: VectorVM, prefix: str, factor: int) -> None:
+    """Make one replicate region ``factor``x slower in *latency*: its
+    contexts fire only every factor-th tick (threads hold their hoisted
+    buffers longer, so the region's pointers return to the free list less
+    often — the feedback the paper exploits)."""
+    orig_fire = vm._fire
+
+    slow = {c.id for c in vm.g.contexts.values()
+            if getattr(c, "replicate_copy", None) == 0}
+
+    from repro.core.dfg import head_links
+
+    def fire(ctx):
+        if ctx.id in slow and vm.stats["ticks"] % factor != 0:
+            # stalled this tick; report pending work so the scheduler's
+            # quiescence detector keeps ticking
+            return any(len(vm.queues[l]) for l in head_links(ctx.head))
+        return orig_fire(ctx)
+
+    vm._fire = fire
+
+
+def _region_shares(vm: VectorVM) -> list[float]:
+    counts = {}
+    for c in vm.g.contexts.values():
+        r = getattr(c, "replicate_copy", None)
+        if r is not None:
+            counts[r] = counts.get(r, 0) + vm.ctx_lane_cycles[c.id]
+    total = sum(counts.values()) or 1
+    return [counts.get(r, 0) / total for r in sorted(counts)]

@@ -1,0 +1,140 @@
+"""Roofline analysis — reads the dry-run artifacts and derives the three
+terms per (arch × shape × mesh) cell:
+
+    compute_s    = HLO_FLOPs / (chips × 197e12)
+    memory_s     = HLO_bytes / (chips × 819e9)
+    collective_s = collective_bytes / (chips × 50e9)
+
+plus the dominant term, MODEL_FLOPS/HLO_FLOPs usefulness ratio, and the
+roofline fraction (model-flops time at peak / bound time). The perf loop
+(EXPERIMENTS.md §Perf) iterates on whatever dominates.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                         "dryrun")
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def load_cells(mesh: str = "single", artifacts: str | None = None) -> list[dict]:
+    d = os.path.join(artifacts or ARTIFACTS, mesh)
+    if not os.path.isdir(d):
+        return []
+    cells = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                cells.append(json.load(fh))
+    return cells
+
+
+def analyze(cell: dict) -> dict:
+    """Three roofline terms per cell.
+
+    HLO cost_analysis on the CPU backend visits scan (while) bodies once, so
+    raw HLO FLOPs/bytes under-count layer-scanned programs; we take
+    max(HLO, analytic napkin model) per term (benchmarks/analytic.py) and
+    keep the raw HLO value as a per-iteration diagnostic. The collective
+    term is parsed from HLO with explicit trip-count scaling (dryrun.py)."""
+    from .analytic import analytic_bytes, analytic_flops
+
+    chips = cell["chips"]
+    hlo_flops = cell["hlo_flops"]
+    hlo_bytes = cell["hlo_bytes"]
+    a_flops = analytic_flops(cell["arch"], cell["shape"])
+    a_bytes = analytic_bytes(cell["arch"], cell["shape"])
+    flops = max(hlo_flops, a_flops)
+    nbytes = max(hlo_bytes, a_bytes)
+    coll = cell["collective_bytes"].get("total", 0)
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = nbytes / (chips * HBM_BW)
+    collective_s = coll / (chips * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    model_s = cell["model_flops"] / (chips * PEAK_FLOPS)
+    useful = cell["model_flops"] / max(flops, 1)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_ratio": useful,
+        "roofline_frac": model_s / bound_s if bound_s else 0.0,
+        "hlo_flops": hlo_flops, "analytic_flops": a_flops,
+        "hlo_bytes": hlo_bytes, "analytic_bytes": a_bytes,
+        "temp_gb": cell["memory_analysis"].get(
+            "temp_size_in_bytes", 0) / 1e9,
+        "args_gb": cell["memory_analysis"].get(
+            "argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def roofline_rows(rows: list[dict], mesh: str = "single") -> None:
+    for cell in load_cells(mesh):
+        a = analyze(cell)
+        rows.append({
+            "bench": "roofline", "name": f"{a['arch']}/{a['shape']}",
+            "mesh": mesh,
+            "compute_s": f"{a['compute_s']:.3e}",
+            "memory_s": f"{a['memory_s']:.3e}",
+            "collective_s": f"{a['collective_s']:.3e}",
+            "dominant": a["dominant"],
+            "roofline_frac": round(a["roofline_frac"], 4),
+            "useful_flops": round(a["model_flops_ratio"], 3),
+            "temp_gb": round(a["temp_gb"], 1),
+        })
+
+
+def markdown_table(mesh: str = "single", artifacts: str | None = None) -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | roofline | useful | temp GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for cell in load_cells(mesh, artifacts):
+        a = analyze(cell)
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.2e} | "
+            f"{a['memory_s']:.2e} | {a['collective_s']:.2e} | "
+            f"{a['dominant']} | {a['roofline_frac']:.3f} | "
+            f"{a['model_flops_ratio']:.2f} | {a['temp_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+def comparison_table(mesh: str = "single",
+                     opt_dir: str = "artifacts/dryrun_opt") -> str:
+    """Baseline vs optimized per cell (collective bytes + temp GB)."""
+    base = {(c["arch"], c["shape"]): c for c in load_cells(mesh)}
+    opt = {(c["arch"], c["shape"]): c
+           for c in load_cells(mesh, opt_dir)}
+    lines = ["| arch | shape | coll B (base→opt) | temp GB (base→opt) | "
+             "dominant (base→opt) |",
+             "|---|---|---|---|---|"]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = analyze(base[key]), analyze(opt[key])
+        cb = base[key]["collective_bytes"].get("total", 0)
+        co = opt[key]["collective_bytes"].get("total", 0)
+        lines.append(
+            f"| {key[0]} | {key[1]} | {cb:.2e} → {co:.2e} | "
+            f"{b['temp_gb']:.1f} → {o['temp_gb']:.1f} | "
+            f"{b['dominant']} → {o['dominant']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    if len(sys.argv) > 2 and sys.argv[2] == "compare":
+        print(comparison_table(sys.argv[1]))
+    else:
+        print(markdown_table(sys.argv[1] if len(sys.argv) > 1 else "single",
+                             sys.argv[2] if len(sys.argv) > 2 else None))

@@ -1,0 +1,53 @@
+"""Benchmark harness — one function per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table5]
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark cell.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table3,table4,table5,fig12,fig13,"
+                         "fig14,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import figures, roofline, tables
+    benches = {
+        "table3": tables.table3_apps,
+        "table4": tables.table4_resources,
+        "table5": tables.table5_throughput,
+        "fig12": figures.fig12_opt_ablations,
+        "fig13": figures.fig13_hierarchy_removal,
+        "fig14": figures.fig14_load_balance,
+        "roofline": roofline.roofline_rows,
+    }
+    rows: list[dict] = []
+    print("name,us_per_call,derived")
+    for bname, fn in benches.items():
+        if only and bname not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn(rows)
+            dt_us = (time.perf_counter() - t0) * 1e6
+            new = [r for r in rows if r.get("bench") == bname]
+            for r in new:
+                derived = ";".join(f"{k}={v}" for k, v in r.items()
+                                   if k not in ("bench", "name"))
+                print(f"{bname}/{r.get('name', r.get('variant', '?'))},"
+                      f"{dt_us / max(len(new), 1):.0f},{derived}")
+        except Exception as e:  # keep the harness running
+            print(f"{bname},0,ERROR={e!r}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

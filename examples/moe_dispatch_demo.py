@@ -1,0 +1,54 @@
+"""The paper's technique inside the LM stack: MoE dispatch as dataflow-
+threads compaction vs the MapReduce-style dense einsum.
+
+    PYTHONPATH=src python examples/moe_dispatch_demo.py
+
+Tokens are threads; the router's top-k is a filter; experts are replicate
+regions; positions-within-expert are the hoisted allocator's pointer stream
+(one cumsum, §V-B(b)). Both paths must agree numerically; the Revet path's
+dispatch memory is O(assignments·d) instead of O(tokens·experts·capacity).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def main():
+    rng = np.random.default_rng(0)
+    t, d, e, k = 512, 128, 16, 4
+    cap = t * k // e
+    tokens = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    logits = jnp.asarray(rng.standard_normal((t, e)), jnp.float32)
+    gates, eidx = jax.lax.top_k(jax.nn.softmax(logits), k)
+
+    def expert_fn(disp):  # [E, C, D] -> toy experts
+        return jnp.tanh(disp * 1.5)
+
+    revet = ops.moe_dispatch_combine(tokens, gates, eidx, e, cap, expert_fn,
+                                     impl="scatter")
+    dense = ops.moe_dense_einsum(tokens, gates, eidx, e, cap, expert_fn)
+    np.testing.assert_allclose(np.asarray(revet), np.asarray(dense),
+                               atol=1e-4, rtol=1e-4)
+
+    # memory accounting for the dispatch representation
+    revet_bytes = t * k * (d + 2) * 4                 # gathered rows + idx
+    dense_bytes = t * e * cap * 4                     # one-hot [T, E, C]
+    print(f"agree to 1e-4; dispatch state: revet {revet_bytes / 1e6:.2f} MB "
+          f"vs dense one-hot {dense_bytes / 1e6:.2f} MB "
+          f"({dense_bytes / revet_bytes:.0f}x)")
+
+    # the Pallas path (MXU one-hot matmul) agrees too
+    via_pallas = ops.moe_dispatch_combine(tokens, gates, eidx, e, cap,
+                                          expert_fn, impl="pallas")
+    np.testing.assert_allclose(np.asarray(via_pallas), np.asarray(dense),
+                               atol=1e-4, rtol=1e-4)
+    print("Pallas moe_dispatch kernel agrees (interpret mode)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

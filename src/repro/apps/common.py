@@ -1,0 +1,64 @@
+"""Shared app scaffolding for the Table III workloads."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.lang import Prog
+
+
+@dataclass
+class App:
+    """One benchmark application instance.
+
+    ``expected`` maps DRAM array name -> expected prefix values (reference
+    implementation output). ``bytes_processed`` follows Table III's accounting
+    (input + output bytes), used to normalize throughput to GB/s.
+    """
+    name: str
+    prog: Prog
+    dram_init: dict[str, np.ndarray]
+    params: dict[str, int]
+    expected: dict[str, np.ndarray]
+    bytes_processed: int
+    meta: dict = field(default_factory=dict)
+
+
+def pack_strings(strings: list[bytes]) -> tuple[np.ndarray, np.ndarray]:
+    """NUL-terminate and concatenate; returns (blob u8, offsets)."""
+    blob, offs = bytearray(), []
+    for s in strings:
+        offs.append(len(blob))
+        blob += s + b"\0"
+    return np.frombuffer(bytes(blob), np.uint8).copy(), np.array(offs)
+
+
+def rotl32(x: int, r: int) -> int:
+    x &= 0xFFFFFFFF
+    return ((x << r) | (x >> (32 - r))) & 0xFFFFFFFF
+
+
+def murmur3_32(words: list[int], seed: int = 0) -> int:
+    """Reference murmur3_x86_32 over whole 32-bit words (no tail)."""
+    c1, c2 = 0xCC9E2D51, 0x1B873593
+    h = seed & 0xFFFFFFFF
+    for w in words:
+        k = (w & 0xFFFFFFFF) * c1 & 0xFFFFFFFF
+        k = rotl32(k, 15)
+        k = k * c2 & 0xFFFFFFFF
+        h ^= k
+        h = rotl32(h, 13)
+        h = (h * 5 + 0xE6546B64) & 0xFFFFFFFF
+    h ^= (len(words) * 4) & 0xFFFFFFFF
+    h ^= h >> 16
+    h = h * 0x85EBCA6B & 0xFFFFFFFF
+    h ^= h >> 13
+    h = h * 0xC2B2AE35 & 0xFFFFFFFF
+    h ^= h >> 16
+    return h
+
+
+def to_i32(v: int) -> int:
+    v &= 0xFFFFFFFF
+    return v - (1 << 32) if v >= (1 << 31) else v

@@ -1,0 +1,69 @@
+"""Compiler driver — the full Revet pipeline of Fig. 8.
+
+    language (lang.Prog)
+      -> structured IR (ir.Program)
+      -> [lower_memory_sugar]  views/iterators -> SRAM + control flow
+      -> [eliminate_hierarchy] pragma'd foreach -> fork + atomics
+      -> [if_to_select]        branch-free ifs -> selects (optional)
+      -> [fuse_allocations]    one allocation per block per pool (optional)
+      -> [insert_frees]        explicit free-list discipline
+      -> [hoist_allocators]    replicate allocator hoisting + bufferization
+      -> CFG->dataflow lowering (lowering.py)
+      -> link analysis / machine mapping (machine.py)
+
+``CompileOptions`` toggles individual optimization passes — the Fig. 12
+ablations flip these flags and compare mapped resources.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+
+from . import ir, lowering, passes
+from .dfg import DFG
+
+
+@dataclasses.dataclass
+class CompileOptions:
+    if_to_select: bool = True        # §V-B(c)
+    fuse_allocations: bool = True    # §V-B(a)
+    hoist_allocators: bool = True    # §V-B(b) (+ bufferization)
+    subword_packing: bool = True     # §V-B(d) — affects machine accounting
+    eliminate_hierarchy: bool = True # §V-A(b) — honors pragma annotations
+
+
+@dataclasses.dataclass
+class CompileResult:
+    dfg: DFG
+    prog: ir.Program                 # post-pass IR (golden-executable)
+    widths: dict[str, int]
+    options: CompileOptions
+
+
+def run_passes(prog: ir.Program, opts: CompileOptions | None = None
+               ) -> tuple[ir.Program, dict[str, int]]:
+    opts = opts or CompileOptions()
+    prog = copy.deepcopy(prog)
+    passes.lower_memory_sugar(prog)
+    # frees first: eliminate_hierarchy moves scope-end flushes *and frees*
+    # into the last forked child (Fig. 9 discipline)
+    passes.insert_frees(prog)
+    if opts.eliminate_hierarchy:
+        passes.eliminate_hierarchy(prog)
+    if opts.if_to_select:
+        passes.if_to_select(prog)
+    if opts.fuse_allocations:
+        passes.fuse_allocations(prog)
+    if opts.hoist_allocators:
+        passes.hoist_allocators(prog)
+    widths = passes.infer_widths(prog) if opts.subword_packing else {}
+    return prog, widths
+
+
+def compile_program(prog, opts: CompileOptions | None = None) -> CompileResult:
+    """Accepts a ``lang.Prog`` or an ``ir.Program``."""
+    opts = opts or CompileOptions()
+    base = prog.ir if hasattr(prog, "ir") else prog
+    lowered_ir, widths = run_passes(base, opts)
+    dfg = lowering.lower(lowered_ir)
+    return CompileResult(dfg, lowered_ir, widths, opts)

@@ -1,0 +1,770 @@
+"""VectorVM — the vectorized dataflow-threads executor (TPU execution model).
+
+This is the Revet->TPU adaptation's core claim made executable: *threads are
+records in dense queues; control flow is stream compaction + merging on full
+vectors*. Each context processes up to ``VLEN`` tokens per tick:
+
+* element-wise body ops run on whole windows (barrier lanes masked) — the
+  analogue of the VPU executing a 128-lane vector;
+* filter outputs compact surviving lanes (``kernels/stream_compact`` is the
+  Pallas kernel for this hot spot; here its numpy oracle drives the
+  simulation);
+* reductions use windowed segmented reduction with a carried accumulator
+  (``kernels/segment_reduce``);
+* the merge heads follow exactly the TokenVM protocols, but move data-*runs*
+  per step instead of single tokens.
+
+Queues are finite (the paper's deadlock-avoidance/retiming buffers, §V-D(b));
+allocation back-pressure is modeled faithfully: a context stalls when its
+pool's free list is empty, which produces the allocator-driven load balancing
+of Fig. 14.
+
+A cycle-approximate cost model runs alongside: a context firing k lanes costs
+``ceil(k/LANES)`` issue slots on its (virtual) CU; the busiest context bounds
+throughput (pipeline parallelism across contexts is free, as on the spatial
+array). This replaces the paper's cycle-accurate simulator.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import ir
+from .dfg import (DFG, BodyOp, Context, CounterHead, ForwardMergeHead,
+                  FwdBwdMergeHead, SingleHead, SourceHead, ZipHead)
+
+VLEN = 128          # TPU lane count (vs 16 on the paper's vRDA)
+MACHINE_LANES = 16  # the vRDA's lanes — used by the cycle cost model
+
+_DTYPE_MASK = {"i8": 0xFF, "i16": 0xFFFF, "i32": None}
+_I64 = np.int64
+_WRAP = np.uint32   # wrap-to-32-bit helper dtype
+
+
+def _w32(a: np.ndarray) -> np.ndarray:
+    """Wrap int64 array to signed 32-bit semantics."""
+    return a.astype(np.uint32).astype(np.int32).astype(_I64)
+
+
+class VectorDeadlock(RuntimeError):
+    pass
+
+
+class _Queue:
+    """Compacting array FIFO of SLTF tokens: kinds[n] (0=data, k>0=Ω_k) and a
+    [n, nvars] payload block."""
+
+    __slots__ = ("kinds", "vals", "start", "end", "cap", "nvars")
+
+    def __init__(self, nvars: int, cap: int):
+        self.cap = cap
+        self.nvars = nvars
+        self.kinds = np.zeros(cap, _I64)
+        self.vals = np.zeros((cap, nvars), _I64)
+        self.start = 0
+        self.end = 0
+
+    def __len__(self) -> int:
+        return self.end - self.start
+
+    @property
+    def room(self) -> int:
+        return self.cap - len(self)
+
+    def _compact(self, need: int) -> None:
+        if self.end + need <= self.cap:
+            return
+        n = len(self)
+        self.kinds[:n] = self.kinds[self.start:self.end]
+        self.vals[:n] = self.vals[self.start:self.end]
+        self.start, self.end = 0, n
+        if self.end + need > self.cap:
+            raise VectorDeadlock("queue overflow (capacity too small)")
+
+    def push(self, kinds: np.ndarray, vals: np.ndarray | None) -> None:
+        k = len(kinds)
+        if k == 0:
+            return
+        self._compact(k)
+        self.kinds[self.end:self.end + k] = kinds
+        if self.nvars:
+            self.vals[self.end:self.end + k] = vals
+        self.end += k
+
+    def peek(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        n = min(n, len(self))
+        return (self.kinds[self.start:self.start + n],
+                self.vals[self.start:self.start + n])
+
+    def pop(self, n: int) -> None:
+        self.start += n
+
+
+@dataclass
+class _FBState:
+    mode: str = "fwd"
+    pending: int | None = None
+    got_data: bool = False
+
+
+@dataclass
+class _CounterState:
+    active: bool = False
+    base: np.ndarray | None = None     # one payload row
+    cur: int = 0
+    hi: int = 0
+    step: int = 1
+
+
+@dataclass
+class _RedState:
+    acc: int = 0
+    group_open: bool = False
+
+
+class VectorVM:
+    def __init__(self, g: DFG, dram_init: dict[str, np.ndarray] | None = None,
+                 queue_cap: int = 1 << 16, vlen: int = VLEN,
+                 pool_override: dict[str, int] | None = None):
+        self.g = g
+        self.vlen = vlen
+        self.queues: dict[int, _Queue] = {
+            lid: _Queue(len(l.vars), queue_cap) for lid, l in g.links.items()}
+        self.source = _Queue(len(getattr(g, "source_vars", ())), 64)
+        self.dram: dict[str, np.ndarray] = {
+            name: np.zeros(d.size, _I64) for name, d in g.dram.items()}
+        if dram_init:
+            for name, arr in dram_init.items():
+                a = np.asarray(arr, dtype=_I64).ravel()
+                self.dram[name][: a.size] = a
+        self.pools: dict[str, np.ndarray] = {}
+        self.free_lists: dict[str, collections.deque] = {}
+        for name, pool in g.pools.items():
+            n_bufs = (pool_override or {}).get(name, pool.n_bufs)
+            self.pools[name] = np.zeros(n_bufs * pool.buf_words, _I64)
+            self.free_lists[name] = collections.deque(range(n_bufs))
+        self._fb = {c.id: _FBState() for c in g.contexts.values()
+                    if isinstance(c.head, FwdBwdMergeHead)}
+        self._cs = {c.id: _CounterState() for c in g.contexts.values()
+                    if isinstance(c.head, CounterHead)}
+        self._red: dict[tuple[int, int], _RedState] = {}
+        self._rr: dict[int, int] = {}
+        for c in g.contexts.values():
+            for oi, o in enumerate(c.outs):
+                if o.kind == "reduce":
+                    self._red[(c.id, oi)] = _RedState(o.reduce_init)
+        self.stats: collections.Counter = collections.Counter()
+        self.ctx_lane_cycles: collections.Counter = collections.Counter()
+        self.ctx_busy_cycles: collections.Counter = collections.Counter()
+
+    # ------------------------------------------------------------------ memory
+    def _mask_arr(self, space: str, v: np.ndarray) -> np.ndarray:
+        m = _DTYPE_MASK[self.g.dram[space].dtype]
+        return _w32(v) if m is None else (v & m)
+
+    # ------------------------------------------------------------------- body
+    def _exec_body(self, ctx: Context, kinds: np.ndarray,
+                   regs: dict[str, np.ndarray]) -> bool:
+        """Vector-execute ctx.body over a window. ``regs`` maps register ->
+        int64 [k]. Barrier lanes compute garbage that is never read.
+        Returns False if an allocation stalled (caller must shrink window)."""
+        data = kinds == 0
+        n = len(kinds)
+        for op in ctx.body:
+            k = op.op
+            if k == "const":
+                regs[op.dst] = np.full(n, op.imm, _I64)
+            elif k == "mov":
+                regs[op.dst] = regs[op.srcs[0]].copy()
+            elif k == "select":
+                c, a, b = (regs[s] for s in op.srcs)
+                regs[op.dst] = np.where(c != 0, a, b)
+            elif k == "not":
+                regs[op.dst] = (regs[op.srcs[0]] == 0).astype(_I64)
+            elif k == "neg":
+                regs[op.dst] = _w32(-regs[op.srcs[0]])
+            elif k in ir.BINOPS:
+                regs[op.dst] = _vec_binop(k, regs[op.srcs[0]],
+                                          regs[op.srcs[1]])
+            elif k == "sram_load":
+                pool = self.g.pools[op.space]
+                mem = self.pools[op.space]
+                addr = regs[op.srcs[0]] * pool.buf_words + regs[op.srcs[1]]
+                ok = data & (addr >= 0) & (addr < mem.size)
+                out = np.zeros(n, _I64)
+                out[ok] = mem[addr[ok]]
+                regs[op.dst] = out
+                self.stats["sram_reads"] += int(ok.sum())
+            elif k == "sram_store":
+                pool = self.g.pools[op.space]
+                mem = self.pools[op.space]
+                addr = regs[op.srcs[0]] * pool.buf_words + regs[op.srcs[1]]
+                ok = data & (addr >= 0) & (addr < mem.size)
+                if op.pred is not None:
+                    ok &= regs[op.pred] != 0
+                # in-order scatter: later lanes win on duplicate addresses
+                mem[addr[ok]] = _w32(regs[op.srcs[2]])[ok]
+                self.stats["sram_writes"] += int(ok.sum())
+            elif k == "dram_load":
+                a = self.dram[op.space]
+                addr = regs[op.srcs[0]]
+                ok = data & (addr >= 0) & (addr < a.size)
+                out = np.zeros(n, _I64)
+                out[ok] = a[addr[ok]]
+                regs[op.dst] = out
+                self.stats["dram_reads"] += int(ok.sum())
+            elif k == "dram_store":
+                a = self.dram[op.space]
+                addr = regs[op.srcs[0]]
+                ok = data & (addr >= 0) & (addr < a.size)
+                if op.pred is not None:
+                    ok &= regs[op.pred] != 0
+                a[addr[ok]] = self._mask_arr(op.space, regs[op.srcs[1]][ok])
+                self.stats["dram_writes"] += int(ok.sum())
+            elif k == "atomic_add":
+                regs[op.dst] = self._atomic_add(op.space, regs[op.srcs[0]],
+                                                regs[op.srcs[1]], data)
+            elif k == "alloc":
+                fl = self.free_lists[op.space]
+                need = int(data.sum())
+                if need > len(fl):
+                    # callers pre-check via _alloc_limit
+                    raise VectorDeadlock(
+                        f"internal: unchecked alloc stall in {ctx.name}")
+                ptrs = np.zeros(n, _I64)
+                for i in np.nonzero(data)[0]:
+                    ptrs[i] = fl.popleft()
+                regs[op.dst] = ptrs
+                self.stats["allocs"] += need
+            elif k == "free":
+                fl = self.free_lists[op.space]
+                for p in regs[op.srcs[0]][data]:
+                    fl.append(int(p))
+                self.stats["frees"] += int(data.sum())
+            elif k == "rr_counter":
+                base = self._rr.get(ctx.id, 0)
+                seq = np.zeros(n, _I64)
+                idxs = np.nonzero(data)[0]
+                seq[idxs] = (base + np.arange(len(idxs))) % op.imm
+                self._rr[ctx.id] = base + len(idxs)
+                regs[op.dst] = seq
+            else:
+                raise NotImplementedError(k)
+        self.stats["body_ops"] += len(ctx.body) * int(data.sum())
+        return True
+
+    def _atomic_add(self, space: str, addr: np.ndarray, delta: np.ndarray,
+                    data: np.ndarray) -> np.ndarray:
+        """Vectorized fetch-and-add with *sequential-within-window* semantics:
+        lane i observes the sum of all earlier lanes' deltas on its address."""
+        a = self.dram[space]
+        n = len(addr)
+        old = np.zeros(n, _I64)
+        ok = data & (addr >= 0) & (addr < a.size)
+        idxs = np.nonzero(ok)[0]
+        if len(idxs) == 0:
+            return old
+        sub_addr = addr[idxs]
+        sub_delta = delta[idxs]
+        order = np.argsort(sub_addr, kind="stable")
+        sa, sd = sub_addr[order], sub_delta[order]
+        seg_start = np.r_[True, sa[1:] != sa[:-1]]
+        csum = np.cumsum(sd) - sd                     # exclusive global prefix
+        seg_id = np.cumsum(seg_start) - 1
+        seg_base = csum[seg_start]                    # prefix at segment start
+        prefix = csum - seg_base[seg_id]              # exclusive prefix / addr
+        cur = a[sa]
+        olds = cur + prefix
+        old[idxs[order]] = olds
+        np.add.at(a, sub_addr, sub_delta)
+        a[np.unique(sub_addr)] = self._mask_arr(
+            space, a[np.unique(sub_addr)])
+        self.stats["atomics"] += len(idxs)
+        return old
+
+    # ------------------------------------------------------------------- tail
+    def _route_window(self, ctx: Context, kinds: np.ndarray,
+                      regs: dict[str, np.ndarray],
+                      barrier_delta_map=None) -> None:
+        """Send a processed window through every output (vectorized tail)."""
+        n = len(kinds)
+        data = kinds == 0
+        self.ctx_lane_cycles[ctx.id] += n
+        self.ctx_busy_cycles[ctx.id] += max(
+            -(-n // MACHINE_LANES), 1) if n else 0
+        for oi, o in enumerate(ctx.outs):
+            q = self.queues[o.link]
+            if o.kind == "reduce":
+                self._reduce_out(ctx, oi, o, kinds, regs)
+                continue
+            if o.kind == "discard":
+                keep = ~data
+            elif o.kind == "filter" and bool(data.any()):
+                keep = ~data | (regs[o.pred] != 0)
+            else:
+                # pass output, or barrier-only window: barriers reach all outs
+                keep = np.ones(n, bool)
+            out_kinds = kinds[keep]
+            if o.lower_barrier:
+                m = out_kinds != 1           # drop Ω1, lower Ωn
+                out_kinds = np.where(out_kinds > 1, out_kinds - 1,
+                                     out_kinds)[m]
+                keep2 = m
+            else:
+                keep2 = np.ones(len(out_kinds), bool)
+            if o.values and bool(data.any()):
+                payload = np.stack([regs[v] for v in o.values], axis=1)
+                payload = payload[keep][keep2]
+            else:
+                payload = np.zeros((len(out_kinds), q.nvars), _I64)
+            q.push(out_kinds, payload)
+            self.stats["link_tokens", o.link] += len(out_kinds)
+
+    def _reduce_out(self, ctx, oi, o, kinds, regs) -> None:
+        """Windowed segmented reduction with carried accumulator
+        (= kernels/segment_reduce semantics)."""
+        st = self._red[(ctx.id, oi)]
+        vals = regs[o.values[0]] if o.values else None
+        out_kinds, out_vals = [], []
+        for i in range(len(kinds)):            # per-token; windows are small
+            k = int(kinds[i])
+            if k == 0:
+                if vals is not None:
+                    st.acc = _scalar_red(o.reduce_op, st.acc, int(vals[i]))
+                st.group_open = True
+            elif k == 1:
+                out_kinds.append(0)
+                out_vals.append(st.acc)
+                st.acc = o.reduce_init
+                st.group_open = False
+            else:
+                if st.group_open:
+                    out_kinds.append(0)
+                    out_vals.append(st.acc)
+                    st.acc = o.reduce_init
+                    st.group_open = False
+                out_kinds.append(k - 1)
+                out_vals.append(0)
+        q = self.queues[o.link]
+        q.push(np.array(out_kinds, _I64),
+               np.array(out_vals, _I64).reshape(-1, 1)
+               if q.nvars else np.zeros((len(out_kinds), 0), _I64))
+
+    # ------------------------------------------------------------------- heads
+    def _min_out_room(self, ctx: Context) -> int:
+        rooms = [self.queues[o.link].room for o in ctx.outs]
+        return min(rooms) if rooms else 1 << 30
+
+    def _fire(self, ctx: Context) -> bool:
+        room = self._min_out_room(ctx)
+        if room <= 0:
+            return False
+        h = ctx.head
+        if isinstance(h, SourceHead):
+            return self._fire_window(ctx, self.source,
+                                     getattr(self.g, "source_vars", ()), room)
+        if isinstance(h, SingleHead):
+            return self._fire_window(ctx, self.queues[h.link],
+                                     self.g.links[h.link].vars, room)
+        if isinstance(h, ZipHead):
+            return self._fire_zip(ctx, h, room)
+        if isinstance(h, ForwardMergeHead):
+            return self._fire_merge(ctx, h, room)
+        if isinstance(h, FwdBwdMergeHead):
+            return self._fire_fwdbwd(ctx, h, room)
+        if isinstance(h, CounterHead):
+            return self._fire_counter(ctx, h, room)
+        raise TypeError(type(h))
+
+    def _fire_window(self, ctx, q: _Queue, vars, room: int) -> bool:
+        n = min(self.vlen, len(q), room)
+        if n == 0:
+            return False
+        kinds, vals = q.peek(n)
+        n = self._alloc_limit(ctx, kinds)
+        if n == 0:
+            return False
+        kinds, vals = q.peek(n)
+        regs = {v: vals[:, i].copy() for i, v in enumerate(vars)}
+        assert self._exec_body(ctx, kinds, regs)
+        self._route_window(ctx, kinds.copy(), regs)
+        q.pop(n)
+        return True
+
+    def _alloc_limit(self, ctx, kinds) -> int:
+        """Shrink a window so its allocations fit the free lists *before* any
+        side effect runs (allocation back-pressure, Fig. 14)."""
+        alloc_ops = [op for op in ctx.body if op.op == "alloc"]
+        if not alloc_ops:
+            return len(kinds)
+        per_pool: dict[str, int] = {}
+        for op in alloc_ops:
+            per_pool[op.space] = per_pool.get(op.space, 0) + 1
+        avail = min(len(self.free_lists[p]) // cnt
+                    for p, cnt in per_pool.items())
+        data_pos = np.nonzero(kinds == 0)[0]
+        if avail >= len(data_pos):
+            return len(kinds)
+        if avail == 0:
+            # let leading barriers through even when no allocation fits
+            return int(data_pos[0]) if len(data_pos) else len(kinds)
+        return int(data_pos[avail])  # stop before the first un-servable lane
+
+    def _fire_zip(self, ctx, h: ZipHead, room) -> bool:
+        qs = [self.queues[l] for l in h.links]
+        links = [self.g.links[l] for l in h.links]
+        n = min([len(q) for q in qs] + [self.vlen, room])
+        if n == 0:
+            return False
+        peeked = [q.peek(n) for q in qs]
+        # aligned prefix: identical kind sequences
+        ref = peeked[0][0][:n]
+        L = n
+        for kinds, _ in peeked[1:]:
+            diff = np.nonzero(kinds[:n] != ref)[0]
+            if len(diff):
+                L = min(L, int(diff[0]))
+        if L == 0:
+            raise VectorDeadlock(f"zip structural mismatch in {ctx.name}")
+        L = self._alloc_limit(ctx, ref[:L])
+        if L == 0:
+            return False
+        kinds = ref[:L].copy()
+        regs = {}
+        for (ks, vals), link in zip(peeked, links):
+            for i, v in enumerate(link.vars):
+                regs[v] = vals[:L, i].copy()
+        assert self._exec_body(ctx, kinds, regs)
+        self._route_window(ctx, kinds, regs)
+        for q in qs:
+            q.pop(L)
+        return True
+
+    def _fire_merge(self, ctx, h: ForwardMergeHead, room) -> bool:
+        qa, qb = self.queues[h.a], self.queues[h.b]
+        vars_a = self.g.links[h.a].vars
+        budget = min(self.vlen, room)
+        out_kinds: list[np.ndarray] = []
+        out_vals: list[np.ndarray] = []
+        emitted = 0
+        while emitted < budget:
+            ka, va = qa.peek(budget - emitted)
+            kb, vb = qb.peek(budget - emitted)
+            ra = _data_run(ka)
+            rb = _data_run(kb)
+            if ra:
+                out_kinds.append(ka[:ra].copy())
+                out_vals.append(va[:ra].copy())
+                qa.pop(ra)
+                emitted += ra
+                continue
+            if rb:
+                out_kinds.append(kb[:rb].copy())
+                out_vals.append(vb[:rb].copy())
+                qb.pop(rb)
+                emitted += rb
+                continue
+            if len(ka) and len(kb):
+                if ka[0] != kb[0]:
+                    raise VectorDeadlock(
+                        f"merge barrier mismatch in {ctx.name}")
+                out_kinds.append(ka[:1].copy())
+                out_vals.append(np.zeros((1, len(vars_a)), _I64))
+                qa.pop(1)
+                qb.pop(1)
+                emitted += 1
+                continue
+            break
+        if emitted == 0:
+            return False
+        kinds = np.concatenate(out_kinds)
+        vals = np.concatenate(out_vals) if len(vars_a) else \
+            np.zeros((emitted, 0), _I64)
+        regs = {v: vals[:, i].copy() for i, v in enumerate(vars_a)}
+        if self._alloc_limit(ctx, kinds) < len(kinds):
+            raise VectorDeadlock(f"alloc stall inside merge {ctx.name}; "
+                                 "size the pool above the merge fan-in")
+        assert self._exec_body(ctx, kinds, regs)
+        self._route_window(ctx, kinds, regs)
+        return True
+
+    def _fire_fwdbwd(self, ctx, h: FwdBwdMergeHead, room) -> bool:
+        st = self._fb[ctx.id]
+        qf, qb = self.queues[h.fwd], self.queues[h.back]
+        vars_f = self.g.links[h.fwd].vars
+        progress = False
+        budget = min(self.vlen, room)
+        while budget > 0:
+            if st.mode == "fwd":
+                # eager interleave: drain recirculating data first so loop
+                # threads can retire (and free buffers) before the group's
+                # barrier has cleared the upstream allocator (§III-B(d))
+                kb, vb = qb.peek(budget)
+                brun = _data_run(kb)
+                if brun:
+                    done = self._process_run(ctx, vars_f, kb[:brun],
+                                             vb[:brun])
+                    if done:
+                        qb.pop(done)
+                        budget -= done
+                        progress = True
+                        continue
+                k, v = qf.peek(budget)
+                if len(k) == 0:
+                    return progress
+                run = _data_run(k)
+                if run:
+                    done = self._process_run(ctx, vars_f, k[:run], v[:run])
+                    if done == 0:
+                        return progress
+                    qf.pop(done)
+                    budget -= done
+                    progress = True
+                    continue
+                # group barrier
+                self._route_window(ctx, np.array([1], _I64),
+                                   _empty_regs(vars_f))
+                st.pending = int(k[0])
+                st.mode = "drain"
+                st.got_data = False
+                qf.pop(1)
+                budget -= 1
+                progress = True
+            elif st.mode == "drain":
+                k, v = qb.peek(budget)
+                if len(k) == 0:
+                    return progress
+                run = _data_run(k)
+                if run:
+                    done = self._process_run(ctx, vars_f, k[:run], v[:run])
+                    if done == 0:
+                        return progress
+                    qb.pop(done)
+                    st.got_data = True
+                    budget -= done
+                    progress = True
+                    continue
+                if k[0] != 1:
+                    raise VectorDeadlock(f"{ctx.name}: bad backedge barrier")
+                qb.pop(1)
+                if st.got_data:
+                    self._route_window(ctx, np.array([1], _I64),
+                                       _empty_regs(vars_f))
+                    st.got_data = False
+                else:
+                    self._route_window(ctx,
+                                       np.array([st.pending + 1], _I64),
+                                       _empty_regs(vars_f))
+                    st.mode = "echo"
+                budget -= 1
+                progress = True
+            else:   # echo
+                k, _ = qb.peek(1)
+                if len(k) == 0:
+                    return progress
+                if k[0] != st.pending + 1:
+                    raise VectorDeadlock(
+                        f"{ctx.name}: expected Ω{st.pending + 1} echo, "
+                        f"got {k[0]}")
+                qb.pop(1)
+                st.pending = None
+                st.mode = "fwd"
+                progress = True
+        return progress
+
+    def _process_run(self, ctx, vars, kinds, vals) -> int:
+        """Execute a run (alloc-limited). Returns tokens actually consumed."""
+        n = self._alloc_limit(ctx, kinds)
+        if n == 0:
+            return 0
+        kinds, vals = kinds[:n], vals[:n]
+        regs = {v: vals[:, i].copy() for i, v in enumerate(vars)}
+        assert self._exec_body(ctx, kinds, regs)
+        self._route_window(ctx, kinds.copy(), regs)
+        return n
+
+    def _fire_counter(self, ctx, h: CounterHead, room) -> bool:
+        st = self._cs[ctx.id]
+        q = self.queues[h.link]
+        vars_in = self.g.links[h.link].vars
+        budget = min(self.vlen, room)
+        progress = False
+        while budget > 0:
+            if st.active:
+                remaining = max(0, -(-(st.hi - st.cur) // st.step)) \
+                    if st.step > 0 else 0
+                emit = min(remaining, budget)
+                if emit > 0:
+                    emit = self._alloc_limit(ctx, np.zeros(emit, _I64))
+                    if emit == 0:
+                        return progress
+                    idx = st.cur + st.step * np.arange(emit, dtype=_I64)
+                    kinds = np.zeros(emit, _I64)
+                    regs = {v: np.repeat(st.base[i], emit)
+                            for i, v in enumerate(vars_in)}
+                    regs[h.ivar] = idx
+                    assert self._exec_body(ctx, kinds, regs)
+                    self._route_window(ctx, kinds, regs)
+                    st.cur += st.step * emit
+                    budget -= emit
+                    progress = True
+                if st.cur >= st.hi or st.step <= 0:
+                    st.active = False
+                    if h.add_level:
+                        self._route_window(ctx, np.array([1], _I64),
+                                           _empty_regs(list(vars_in)
+                                                       + [h.ivar]))
+                        budget -= 1
+                        progress = True
+                continue
+            k, v = q.peek(1)
+            if len(k) == 0:
+                return progress
+            if k[0] == 0:
+                row = v[0]
+                named = dict(zip(vars_in, row))
+                st.base = row.copy()
+                st.cur = int(named[h.lo])
+                st.hi = int(named[h.hi])
+                st.step = int(named[h.step]) or 1
+                st.active = True
+                q.pop(1)
+                progress = True
+            else:
+                lvl = int(k[0]) + (1 if h.add_level else 0)
+                self._route_window(ctx, np.array([lvl], _I64),
+                                   _empty_regs(list(vars_in) + [h.ivar]))
+                q.pop(1)
+                budget -= 1
+                progress = True
+        return progress
+
+    # --------------------------------------------------------------- scheduler
+    def run(self, max_ticks: int = 1_000_000, **params) -> dict[str, np.ndarray]:
+        src_vars = getattr(self.g, "source_vars", ())
+        row = np.array([[ir.wrap32(int(params[p])) for p in src_vars]], _I64)
+        self.source.push(np.zeros(1, _I64), row)
+        self.source.push(np.ones(1, _I64), np.zeros((1, len(src_vars)), _I64))
+        order = list(self.g.contexts.values())
+        for tick in range(max_ticks):
+            progress = False
+            for ctx in order:
+                if self._fire(ctx):
+                    progress = True
+            self.stats["ticks"] += 1
+            if not progress:
+                break
+        else:
+            raise VectorDeadlock("tick limit exceeded")
+        stuck = {lid: len(q) for lid, q in self.queues.items()
+                 if len(q) and self.g.contexts[self.g.links[lid].dst].outs}
+        if stuck:
+            raise VectorDeadlock(f"quiescent with tokens in flight: {stuck}")
+        return self.dram
+
+    # ------------------------------------------------------------- cost model
+    def estimated_cycles(self) -> int:
+        """Cycle-approximate runtime: the busiest context bounds the pipeline
+        (spatial execution overlaps everything else)."""
+        return max(self.ctx_busy_cycles.values(), default=0)
+
+    def lane_occupancy(self) -> float:
+        """Useful lanes / issued lane-slots — the anti-divergence metric that
+        SIMT masking loses and dataflow threads keep (§VI-B(b))."""
+        issued = sum(max(-(-n // MACHINE_LANES), 1) * MACHINE_LANES
+                     for n in self.ctx_lane_cycles.values())
+        useful = sum(self.ctx_lane_cycles.values())
+        return useful / issued if issued else 1.0
+
+
+def _data_run(kinds: np.ndarray) -> int:
+    """Length of the leading run of data tokens."""
+    bars = np.nonzero(kinds != 0)[0]
+    return int(bars[0]) if len(bars) else len(kinds)
+
+
+def _empty_regs(vars) -> dict[str, np.ndarray]:
+    return {v: np.zeros(1, _I64) for v in vars}
+
+
+def _vec_binop(op: str, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    u32 = lambda x: x.astype(np.uint32)
+    if op == "add":
+        return _w32(a + b)
+    if op == "sub":
+        return _w32(a - b)
+    if op == "mul":
+        return _w32(a * b)
+    if op == "sdiv":
+        q = np.zeros_like(a)
+        nz = b != 0
+        q[nz] = (np.abs(a[nz]) // np.abs(b[nz]))
+        sign = np.where((a < 0) != (b < 0), -1, 1)
+        return _w32(q * sign)
+    if op == "udiv":
+        out = np.zeros_like(a)
+        nz = b != 0
+        out[nz] = u32(a[nz]) // u32(b[nz])
+        return _w32(out)
+    if op == "smod":
+        r = np.zeros_like(a)
+        nz = b != 0
+        r[nz] = np.abs(a[nz]) % np.abs(b[nz])
+        return _w32(np.where(a < 0, -r, r))
+    if op == "umod":
+        out = np.zeros_like(a)
+        nz = b != 0
+        out[nz] = u32(a[nz]) % u32(b[nz])
+        return _w32(out)
+    if op == "and":
+        return _w32(a & b)
+    if op == "or":
+        return _w32(a | b)
+    if op == "xor":
+        return _w32(a ^ b)
+    if op == "shl":
+        return _w32(a << (b & 31))
+    if op == "lshr":
+        return _w32(u32(a) >> u32(b & 31))
+    if op == "ashr":
+        return _w32(a.astype(np.int32) >> (b & 31).astype(np.int32))
+    if op == "eq":
+        return (a == b).astype(_I64)
+    if op == "ne":
+        return (a != b).astype(_I64)
+    if op == "slt":
+        return (a < b).astype(_I64)
+    if op == "sle":
+        return (a <= b).astype(_I64)
+    if op == "sgt":
+        return (a > b).astype(_I64)
+    if op == "sge":
+        return (a >= b).astype(_I64)
+    if op == "ult":
+        return (u32(a) < u32(b)).astype(_I64)
+    if op == "ule":
+        return (u32(a) <= u32(b)).astype(_I64)
+    if op == "min":
+        return np.minimum(a, b)
+    if op == "max":
+        return np.maximum(a, b)
+    raise NotImplementedError(op)
+
+
+def _scalar_red(op: str, a: int, b: int) -> int:
+    from .ir import wrap32
+    if op == "add":
+        return wrap32(a + b)
+    if op == "min":
+        return min(a, b)
+    if op == "max":
+        return max(a, b)
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return wrap32(a ^ b)
+    raise NotImplementedError(op)

@@ -1,0 +1,111 @@
+"""Fault tolerance & fleet hygiene for 1000+ node runs.
+
+* :class:`Supervisor` — checkpoint/restart driver: runs the step function,
+  checkpoints every N steps, and on failure (hardware fault, preemption)
+  restores the latest checkpoint and replays. The data pipeline is
+  counter-based (data/pipeline.py), so restart is exactly-once without
+  dataloader state.
+* :class:`StragglerMonitor` — per-step wall-time tracker with robust z-score
+  outlier detection; at scale this drives hot-swap decisions (here: logged +
+  surfaced in metrics, and unit-tested on synthetic timings).
+* :class:`PreemptionGuard` — cooperative preemption: a flag file (stand-in
+  for the TPU maintenance-event signal) triggers checkpoint-and-exit at the
+  next step boundary.
+"""
+from __future__ import annotations
+
+import os
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from ..checkpoint import ckpt
+
+
+class SimulatedFault(RuntimeError):
+    """Raised by tests / chaos hooks to emulate a node failure."""
+
+
+@dataclass
+class StragglerMonitor:
+    window: int = 50
+    threshold: float = 4.0         # robust z-score (MAD-based)
+    times: list[float] = field(default_factory=list)
+    flagged: list[tuple[int, float]] = field(default_factory=list)
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.times.append(seconds)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) < 8:
+            return False
+        med = statistics.median(self.times)
+        mad = statistics.median(abs(t - med) for t in self.times) or 1e-9
+        z = 0.6745 * (seconds - med) / mad
+        if z > self.threshold:
+            self.flagged.append((step, seconds))
+            return True
+        return False
+
+
+@dataclass
+class PreemptionGuard:
+    flag_path: str
+
+    def requested(self) -> bool:
+        return os.path.exists(self.flag_path)
+
+
+@dataclass
+class Supervisor:
+    """Checkpoint/restart training driver.
+
+    ``state`` is any pytree (params + optimizer + anything else);
+    ``step_fn(state, step) -> state`` runs one step and may raise.
+    """
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 10
+    keep: int = 3
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    preemption: Optional[PreemptionGuard] = None
+    restarts: int = 0
+    log: list[str] = field(default_factory=list)
+
+    def run(self, state, step_fn: Callable, n_steps: int,
+            start_step: int = 0, shardings=None):
+        step = start_step
+        latest = ckpt.latest_step(self.ckpt_dir)
+        if latest is not None and latest > step:
+            state = ckpt.restore(self.ckpt_dir, latest, state, shardings)
+            step = latest
+            self.log.append(f"resumed from step {latest}")
+        while step < n_steps:
+            try:
+                t0 = time.monotonic()
+                state = step_fn(state, step)
+                dt = time.monotonic() - t0
+                step += 1
+                if self.monitor.record(step, dt):
+                    self.log.append(f"straggler at step {step}: {dt:.3f}s")
+                if step % self.ckpt_every == 0 or step == n_steps:
+                    ckpt.save(self.ckpt_dir, step, state, keep=self.keep)
+                if self.preemption and self.preemption.requested():
+                    ckpt.save(self.ckpt_dir, step, state, keep=self.keep)
+                    self.log.append(f"preempted at step {step}")
+                    return state, step
+            except SimulatedFault as e:
+                self.restarts += 1
+                self.log.append(f"fault at step {step}: {e}; restart "
+                                f"{self.restarts}/{self.max_restarts}")
+                if self.restarts > self.max_restarts:
+                    raise
+                latest = ckpt.latest_step(self.ckpt_dir)
+                if latest is None:
+                    step = start_step
+                    continue
+                state = ckpt.restore(self.ckpt_dir, latest, state, shardings)
+                step = latest
+        return state, step

@@ -1,0 +1,208 @@
+"""Sharding rules: logical parameter axes + batch/cache layouts -> mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+The pod axis extends data parallelism across pods (gradients all-reduce over
+pod×data; the dry-run proves the pod axis shards).
+
+All rules are **divisibility-aware**: a dimension is only sharded when its
+size divides the mesh axis; otherwise it falls back (KV caches fall back from
+heads->model to seq->model; everything else falls back to replication).
+This is what lets one rule set serve 10 architectures × 4 shapes, including
+global_batch=1 long-context cells.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from ..models.params import P
+
+# logical param axis -> mesh axis (tensor/expert parallelism)
+PARAM_RULES: dict[str, Optional[str]] = {
+    "vocab": "model",
+    "ff": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "expert_ff": "data",     # 2nd axis for MoE expert weights (FSDP-style)
+    "inner": "model",
+    "embed": None,
+    "embed2": None,
+    "layers": None,
+    "sublayers": None,
+    "state": None,
+    "conv": None,
+}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    return n % axis_size(mesh, axes) == 0
+
+
+def param_pspec(p: P, mesh: Mesh) -> PS:
+    """PartitionSpec for one parameter, dropping non-divisible shardings."""
+    spec = []
+    for dim, ax in zip(p.shape, p.axes):
+        rule = PARAM_RULES.get(ax) if ax else None
+        spec.append(rule if rule and _div(dim, mesh, rule) else None)
+    return PS(*spec)
+
+
+def param_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, param_pspec(p, mesh)),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_pspec(p: P, mesh: Mesh) -> PS:
+    """ZeRO: optimizer moments additionally shard their largest still-
+    replicated dim over the data axes (state is only needed shard-wise at
+    the update)."""
+    base = list(param_pspec(p, mesh))
+    dax = data_axes(mesh)
+    if not dax:
+        return PS(*base)
+    used = {a for s in base if s
+            for a in ((s,) if isinstance(s, str) else s)}
+    if used & set(dax):
+        return PS(*base)   # param already shards over the data axes
+    # choose the largest dim that is currently unsharded and divisible
+    cands = [(dim, i) for i, (dim, s) in enumerate(zip(p.shape, base))
+             if s is None and _div(dim, mesh, dax)]
+    if cands:
+        _, i = max(cands)
+        base[i] = dax if len(dax) > 1 else dax[0]
+    return PS(*base)
+
+
+def zero_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, zero_pspec(p, mesh)),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# -- activations / batches -----------------------------------------------------
+
+def batch_pspec(shape: tuple[int, ...], mesh: Mesh,
+                seq_dim: Optional[int] = None,
+                seq_shard: bool = False) -> PS:
+    """Batch dim 0 over (pod, data) when divisible; optional sequence
+    sharding over model (sequence parallelism) for long-context cells."""
+    dax = data_axes(mesh)
+    spec: list = [None] * len(shape)
+    if dax and shape[0] % axis_size(mesh, dax) == 0 and shape[0] > 1:
+        spec[0] = dax if len(dax) > 1 else dax[0]
+    if seq_shard and seq_dim is not None and \
+            shape[seq_dim] % mesh.shape["model"] == 0:
+        spec[seq_dim] = "model"
+    return PS(*spec)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, seq_shard: bool = False):
+    out = {}
+    for k, sd in batch_specs.items():
+        seq_dim = 1 if len(sd.shape) >= 2 else None
+        out[k] = NamedSharding(mesh, batch_pspec(sd.shape, mesh,
+                                                 seq_dim=seq_dim,
+                                                 seq_shard=seq_shard))
+    return out
+
+
+# -- KV / recurrent caches -------------------------------------------------------
+
+# name -> (batch_dim, head_dim, seq_dim, width_dim) — None if absent
+_CACHE_LAYOUT = {
+    "k": (1, 2, 3, None), "v": (1, 2, 3, None),
+    "ks": (1, 2, 3, None), "vs": (1, 2, 3, None),
+    "xk": (1, 2, 3, None), "xv": (1, 2, 3, None),
+    "attn_k": (1, 2, 3, None), "attn_v": (1, 2, 3, None),
+    "h": (1, None, None, 2),           # ssm state [L, B, Di, N]
+    "conv": (1, None, None, 3),        # ssm conv  [L, B, K-1, Di]
+    "rec_h": (2, None, None, 3),       # [G, R, B, W]
+    "rec_conv": (2, None, None, 4),    # [G, R, B, K-1, W]
+    "tail_h": (1, None, None, 2),
+    "tail_conv": (1, None, None, 3),
+}
+
+
+def cache_pspec(name: str, shape: tuple[int, ...], mesh: Mesh) -> PS:
+    bdim, hdim, sdim, wdim = _CACHE_LAYOUT[name]
+    dax = data_axes(mesh)
+    spec: list = [None] * len(shape)
+    if dax and shape[bdim] % axis_size(mesh, dax) == 0 and shape[bdim] > 1:
+        spec[bdim] = dax if len(dax) > 1 else dax[0]
+    m = mesh.shape["model"]
+    if hdim is not None and shape[hdim] % m == 0:
+        spec[hdim] = "model"
+    elif sdim is not None and shape[sdim] % m == 0:
+        spec[sdim] = "model"               # fallback: shard the KV sequence
+    elif wdim is not None and shape[wdim] % m == 0:
+        spec[wdim] = "model"               # recurrent widths
+    return PS(*spec)
+
+
+def cache_shardings(cache_specs: dict, mesh: Mesh):
+    return {k: NamedSharding(mesh, cache_pspec(k, v.shape, mesh))
+            for k, v in cache_specs.items()}
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PS())
+
+
+# -- activation sharding hints (set by the dry-run / launchers) -----------------
+#
+# Models are mesh-agnostic; when a launcher installs an active mesh, the
+# layers can request activation reshardings with plain axis tuples. Outside a
+# launcher (unit tests, host runs) these are no-ops.
+
+_ACT_MESH: Mesh | None = None
+
+
+def set_act_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACT_MESH
+    _ACT_MESH = mesh
+
+
+def act_mesh_axis(name: str) -> int:
+    """Size of a mesh axis under the active mesh (1 if none)."""
+    if _ACT_MESH is None or name not in _ACT_MESH.shape:
+        return 1
+    return int(_ACT_MESH.shape[name])
+
+
+def act_hint(x, *axes):
+    """with_sharding_constraint under the active mesh; each entry of ``axes``
+    is a mesh-axis name, a tuple of names, or None. Non-divisible entries are
+    dropped; no-op without an active mesh."""
+    if _ACT_MESH is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        names = tuple(a for a in ((ax,) if isinstance(ax, str) else ax)
+                      if a in _ACT_MESH.shape)
+        if names and dim % axis_size(_ACT_MESH, names) == 0 and dim > 1:
+            spec.append(names if len(names) > 1 else names[0])
+        else:
+            spec.append(None)
+    import jax
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, PS(*spec)))

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (interpret-mode validated on CPU; see EXAMPLE.md).
+
+Revet-core kernels: stream_compact (filter), segment_reduce (SLTF reduce),
+hash_probe (iterator probe loop).
+LM-stack kernels: flash_attention, decode_attention, ssm_scan, rg_lru,
+moe_dispatch (the paper's compaction applied to expert routing).
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,87 @@
+"""decode_attention — single-token attention over a long KV cache.
+
+The decode-shape hot loop (decode_32k / long_500k cells): one query per
+sequence attends over S cached positions. Grid = (batch*heads, kv_blocks)
+with online-softmax scratch carried across kv blocks; positions beyond the
+sequence's valid length are masked. Memory-bound by design — the roofline
+analysis (EXPERIMENTS.md) shows HBM streaming of K/V dominates, which is why
+block_k is large and the kernel keeps only [1, D] of query state resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, kv_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)               # [1, D]
+    k = k_ref[0].astype(jnp.float32)               # [Bk, D]
+    v = v_ref[0].astype(jnp.float32)               # [Bk, D]
+    valid_len = len_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_idx = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_idx < valid_len, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == kv_blocks - 1)
+    def _():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, block_k: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q [BH, 1, D]; k/v [BH, S, D]; lengths [BH] valid-prefix lengths."""
+    bh, one, d = q.shape
+    _, s, _ = k.shape
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    kv_blocks = s // block_k
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                          kv_blocks=kv_blocks),
+        grid=(bh, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,)),
+            pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

@@ -1,0 +1,98 @@
+"""flash_attention — blockwise online-softmax attention (prefill path).
+
+Standard Pallas TPU pattern: grid = (batch*heads, q_blocks, kv_blocks) with
+the kv dimension sequential ("arbitrary"); running max / sum / accumulator
+live in VMEM scratch and are rescaled per kv block. Causal masking uses
+global indices reconstructed from program ids. GQA is handled by the ops.py
+wrapper (kv heads broadcast to q heads before the call; the kernel sees
+matched heads).
+
+Block shapes are MXU-aligned: q/kv blocks are multiples of 128 in the lane
+dimension (head_dim) and 8+ in sublanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  kv_blocks: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)               # [Bq, D]
+    k = k_ref[0].astype(jnp.float32)               # [Bk, D]
+    v = v_ref[0].astype(jnp.float32)               # [Bk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        qi = pl.program_id(1)
+        q_idx = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 0)
+        k_idx = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_idx <= q_idx, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == kv_blocks - 1)
+    def _():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q [BH, Sq, D], k/v [BH, Skv, D] (heads pre-flattened & matched)."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0
+    kv_blocks = skv // block_k
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          block_q=block_q, block_k=block_k,
+                          kv_blocks=kv_blocks),
+        grid=(bh, sq // block_q, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,92 @@
+"""hash_probe — vectorized open-addressing lookup (the hash-table app's hot
+loop, Table III) as a Pallas TPU kernel.
+
+The paper's point (§VI-B(b)): iterator-driven probes in scratchpads beat
+GPU caches because there are no per-access tag checks. The TPU analogue keeps
+the hot table resident in VMEM and probes a whole block of keys per step with
+masked gathers — all P probe rounds run as dense vector ops, lanes retire
+via masks (found/empty), no divergence cost.
+
+Tables larger than VMEM fall back to the XLA gather path in ``ops.py``
+(documented trade-off; the paper's MU-resident tables have the same capacity
+split).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+EMPTY = 0
+
+
+def _mix(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x45D9F3B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _probe_kernel(keys_ref, tk_ref, tv_ref, val_ref, found_ref, *,
+                  n_slots: int, max_probes: int):
+    keys = keys_ref[...]
+    tk = tk_ref[...]
+    tv = tv_ref[...]
+    h = (_mix(keys) % jnp.uint32(n_slots)).astype(jnp.int32)
+
+    def body(p, st):
+        val, found, done = st
+        idx = h + p                        # table is padded: no wraparound
+        ck = jnp.take(tk, idx, axis=0)
+        cv = jnp.take(tv, idx, axis=0)
+        hit = (ck == keys) & ~done
+        empty = (ck == EMPTY) & ~done
+        val = jnp.where(hit, cv, val)
+        found = found | hit
+        done = done | hit | empty
+        return val, found, done
+
+    val = jnp.zeros_like(keys)
+    found = jnp.zeros(keys.shape, jnp.bool_)
+    done = jnp.zeros(keys.shape, jnp.bool_)
+    val, found, _ = jax.lax.fori_loop(0, max_probes, body,
+                                      (val, found, done))
+    val_ref[...] = val
+    found_ref[...] = found.astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_slots", "max_probes", "block",
+                                    "interpret"))
+def hash_probe(keys: jax.Array, table_k: jax.Array, table_v: jax.Array,
+               n_slots: int, max_probes: int = 16,
+               block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """keys [N] i32; table_k/table_v [2*n_slots] (duplicated to avoid wrap).
+    Returns (values [N], found [N])."""
+    n = keys.shape[0]
+    assert n % block == 0
+    nb = n // block
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, n_slots=n_slots,
+                          max_probes=max_probes),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(table_k.shape, lambda i: (0,)),   # table in VMEM
+            pl.BlockSpec(table_v.shape, lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys.astype(jnp.int32), table_k.astype(jnp.int32),
+      table_v.astype(jnp.int32))

@@ -1,0 +1,77 @@
+"""moe_dispatch — token->expert dispatch as dataflow-threads compaction.
+
+This is the paper's technique embedded in the LM stack (DESIGN.md §2):
+tokens are threads, the router's top-k choice is a filter predicate, each
+expert is a replicate region, and the capacity-limited buffer slots are the
+hoisted allocator of §V-B(b). Dispatch is *compaction by expert*, and — like
+``stream_compact`` — it is reformulated as a one-hot matmul so the gather
+runs on the MXU:
+
+    P[c, a] = (expert[a] == e) & (pos_within_expert[a] == c)
+    dispatched[e] = P @ gathered_tokens          # [C, D]
+
+Grid = (experts, assignment blocks), block-accumulating into VMEM scratch.
+Positions are a global per-expert running count (computed by ``ops.py`` with
+one cumsum — the allocator's pointer stream). Tokens beyond capacity are
+dropped, exactly like threads stalling on an empty free list.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dispatch_kernel(expert_ref, pos_ref, tok_ref, out_ref, acc, *,
+                     capacity: int, a_blocks: int):
+    e = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        acc[...] = jnp.zeros_like(acc)
+
+    expert = expert_ref[...]                     # [Ba]
+    pos = pos_ref[...]                           # [Ba]
+    toks = tok_ref[...].astype(jnp.float32)      # [Ba, D]
+    ba = expert.shape[0]
+
+    sel = (expert == e) & (pos < capacity)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (capacity, ba), 0)
+    P = jnp.where(sel[None, :] & (pos[None, :] == rows), 1.0, 0.0)
+    acc[...] += jax.lax.dot(P, toks, preferred_element_type=jnp.float32)
+
+    @pl.when(j == a_blocks - 1)
+    def _():
+        out_ref[0] = acc[...].astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_experts", "capacity", "block_a", "interpret"))
+def moe_dispatch(tokens: jax.Array, expert_idx: jax.Array,
+                 positions: jax.Array, n_experts: int, capacity: int,
+                 block_a: int = 256, interpret: bool = True) -> jax.Array:
+    """tokens [A, D] (already gathered per assignment), expert_idx [A],
+    positions [A] (running index within expert). Returns [E, C, D]."""
+    a, d = tokens.shape
+    block_a = min(block_a, a)
+    assert a % block_a == 0
+    a_blocks = a // block_a
+    return pl.pallas_call(
+        functools.partial(_dispatch_kernel, capacity=capacity,
+                          a_blocks=a_blocks),
+        grid=(n_experts, a_blocks),
+        in_specs=[
+            pl.BlockSpec((block_a,), lambda e, j: (j,)),
+            pl.BlockSpec((block_a,), lambda e, j: (j,)),
+            pl.BlockSpec((block_a, d), lambda e, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, capacity, d), lambda e, j: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_experts, capacity, d),
+                                       tokens.dtype),
+        scratch_shapes=[pltpu.VMEM((capacity, d), jnp.float32)],
+        interpret=interpret,
+    )(expert_idx.astype(jnp.int32), positions.astype(jnp.int32), tokens)

@@ -1,0 +1,614 @@
+"""ops — jit'd public wrappers around the Pallas kernels.
+
+Each wrapper handles padding, dtype decomposition, GQA head matching,
+cross-block assembly, and provides a pure-jnp fallback path (used by the
+512-device dry-run, where Pallas CPU lowering is unavailable — the kernels
+are validated in interpret mode by the test suite).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import hash_probe as _hp
+from . import moe_dispatch as _md
+from . import rg_lru as _rg
+from . import segment_reduce as _sr
+from . import stream_compact as _sc
+from . import ref as _ref
+
+
+# -- stream compaction ---------------------------------------------------------
+
+def stream_compact(mask, vals, block: int = 256, interpret: bool = True):
+    """mask [N], vals [N, D] (int32 or float32) -> (compacted [N, D], count).
+
+    int32 payloads are split into two exact-in-f32 16-bit halves for the MXU
+    one-hot matmul, then recombined (TPU has no int32 MXU path)."""
+    mask = jnp.asarray(mask)
+    vals = jnp.asarray(vals)
+    n, d = vals.shape
+    pad = (-n) % block
+    if pad:
+        mask = jnp.pad(mask, (0, pad))
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+    if vals.dtype in (jnp.int32, jnp.int64):
+        v = vals.astype(jnp.uint32)
+        hi = (v >> 16).astype(jnp.float32)
+        lo = (v & 0xFFFF).astype(jnp.float32)
+        chi, cnt = _assemble(mask, hi, block, interpret)
+        clo, _ = _assemble(mask, lo, block, interpret)
+        out = (chi.astype(jnp.uint32) << 16) | clo.astype(jnp.uint32)
+        return out.astype(jnp.int32)[:n], cnt
+    out, cnt = _assemble(mask, vals.astype(jnp.float32), block, interpret)
+    return out[:n], cnt
+
+
+def _assemble(mask, vals, block, interpret):
+    blocks, counts = _sc.compact_blocks(mask, vals, block=block,
+                                        interpret=interpret)
+    nb = counts.shape[0]
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                               jnp.cumsum(counts)])
+    total = offsets[-1]
+    n = nb * block
+    j = jnp.arange(n)
+    b = jnp.searchsorted(offsets[1:], j, side="right")
+    b = jnp.clip(b, 0, nb - 1)
+    i = j - offsets[b]
+    gathered = blocks[b, jnp.clip(i, 0, block - 1)]
+    out = jnp.where((j < total)[:, None], gathered, 0)
+    return out, total
+
+
+# -- segmented reduction ---------------------------------------------------------
+
+def segment_reduce(kinds, vals, init: float = 0.0, op: str = "add",
+                   block: int = 256, interpret: bool = True):
+    """SLTF innermost-dim reduction. Returns (out_kinds [M], out_vals [M],
+    count M, carry (acc, open)). ``add`` runs on the Pallas kernel; min/max
+    use the jnp fallback."""
+    kinds = jnp.asarray(kinds, jnp.int32)
+    vals = jnp.asarray(vals, jnp.float32)
+    n = kinds.shape[0]
+    if op != "add":
+        ok, ov, acc, opened = _ref.segment_reduce_ref(
+            np.asarray(kinds), np.asarray(vals), init, op)
+        return (jnp.asarray(ok, jnp.int32), jnp.asarray(ov, jnp.float32),
+                len(ok), (acc, opened))
+    pad = (-n) % block
+    if pad:
+        # pad with high barriers that produce no emissions? barriers DO emit.
+        # Instead pad with data tokens of the op identity (no emission).
+        kinds = jnp.pad(kinds, (0, pad))
+        vals = jnp.pad(vals, (0, pad))
+    out_kind, out_val, carry = _sr.segment_reduce_blocks(
+        kinds, vals, init, block=block, interpret=interpret)
+    flat_kind = out_kind.reshape(-1)
+    flat_val = out_val.reshape(-1)
+    keep = flat_kind != _sr.NOTHING
+    both = jnp.stack([flat_kind.astype(jnp.float32), flat_val], axis=1)
+    compacted, cnt = _assemble(keep, both, block=block * 2,
+                               interpret=interpret) \
+        if False else stream_compact(keep, both, interpret=interpret)
+    return (compacted[:, 0].astype(jnp.int32), compacted[:, 1], cnt,
+            (float(carry[0]), bool(carry[1])))
+
+
+# -- hash probe -------------------------------------------------------------------
+
+VMEM_TABLE_LIMIT = 1 << 20  # entries; larger tables take the XLA gather path
+
+
+def hash_lookup(keys, table_k, table_v, n_slots: int, max_probes: int = 16,
+                interpret: bool = True):
+    keys = jnp.asarray(keys)
+    n = keys.shape[0]
+    pad = (-n) % _hp.DEFAULT_BLOCK
+    kp = jnp.pad(keys, (0, pad)) if pad else keys
+    if table_k.shape[0] <= VMEM_TABLE_LIMIT:
+        vals, found = _hp.hash_probe(kp, jnp.asarray(table_k),
+                                     jnp.asarray(table_v), n_slots,
+                                     max_probes, interpret=interpret)
+        return vals[:n], found[:n]
+    # HBM-resident fallback: XLA gather loop (same semantics)
+    return _hash_lookup_xla(keys, jnp.asarray(table_k), jnp.asarray(table_v),
+                            n_slots, max_probes)
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "max_probes"))
+def _hash_lookup_xla(keys, table_k, table_v, n_slots, max_probes):
+    h = _mix_jnp(keys) % jnp.uint32(n_slots)
+    h = h.astype(jnp.int32)
+
+    def body(p, st):
+        val, found, done = st
+        ck = jnp.take(table_k, h + p)
+        cv = jnp.take(table_v, h + p)
+        hit = (ck == keys) & ~done
+        empty = (ck == 0) & ~done
+        return (jnp.where(hit, cv, val), found | hit, done | hit | empty)
+
+    val = jnp.zeros_like(keys)
+    found = jnp.zeros(keys.shape, bool)
+    done = jnp.zeros(keys.shape, bool)
+    val, found, _ = jax.lax.fori_loop(0, max_probes, body,
+                                      (val, found, done))
+    return val, found.astype(jnp.int32)
+
+
+def _mix_jnp(x):
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x45D9F3B)
+    x = x ^ (x >> 16)
+    return x
+
+
+# -- attention ---------------------------------------------------------------------
+
+def mha(q, k, v, causal: bool = True, impl: str = "pallas",
+        interpret: bool = True, flat: bool = False):
+    """Multi-head attention with GQA. q [B, Hq, S, D], k/v [B, Hkv, S, D].
+
+    The chunked/ref paths use *grouped* 5-D attention: heads are never
+    flattened into the batch dim (a [B,H,S,D]->[BH,S,D] reshape makes XLA
+    all-gather sharded heads) and KV is never materialized repeated for GQA
+    (q is viewed as [B, Hkv, G, S, D] instead) — both are §Perf fixes."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if impl == "pallas" or flat:
+        # flat path: heads fold into batch (used by the Pallas kernel, and by
+        # the batch-over-model reshard where all heads are device-local)
+        if hkv != hq:
+            rep = hq // hkv
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        qf = q.reshape(b * hq, sq, d)
+        kf = k.reshape(b * hq, -1, d)
+        vf = v.reshape(b * hq, -1, d)
+        if impl == "pallas":
+            out = _fa.flash_attention(qf, kf, vf, causal=causal,
+                                      interpret=interpret)
+        elif impl == "chunked":
+            out = chunked_attention(qf, kf, vf, causal=causal)
+        else:
+            out = _ref.attention_ref(qf, kf, vf, causal=causal)
+        return out.reshape(b, hq, sq, d)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    if impl == "chunked":
+        out = grouped_chunked_attention(qg, k, v, causal=causal)
+    else:
+        out = _grouped_ref(qg, k, v, causal)
+    return out.reshape(b, hq, sq, d)
+
+
+def _grouped_ref(qg, k, v, causal, lengths=None):
+    """Full-softmax grouped attention. qg [B,Hkv,G,Sq,D]; k/v [B,Hkv,S,D]."""
+    d = qg.shape[-1]
+    sc = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / (d ** 0.5)
+    sq, sk = sc.shape[-2], sc.shape[-1]
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        sc = jnp.where(mask, sc, -1e30)
+    if lengths is not None:
+        kidx = jnp.arange(sk)
+        sc = jnp.where(kidx[None, None, None, None, :]
+                       < lengths[:, None, None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32)) \
+        .astype(qg.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def chunked_attention(q, k, v, causal: bool = True, block_k: int = 512):
+    """Flash attention in pure jnp with a flash *backward*: both passes scan
+    over KV blocks and save only (q, k, v, out, lse) — O(S) memory at any
+    sequence length. This is the dry-run/train path; kernels/flash_attention
+    is the TPU-kernel version of the same algorithm."""
+    out, _ = _chunk_attn_fwd_impl(q, k, v, causal, block_k)
+    return out
+
+
+def _mask_block(s, jb, block_k, q_idx, skv, sq):
+    # additive 2-D bias (not a broadcast boolean `where`): keeps the mask
+    # [sq, block_k] so XLA's scan hoisting cannot materialize a [nb, bh, sq,
+    # block_k] predicate tensor (a 3.8 GB buffer at the train_4k cell).
+    kk = jb * block_k + jnp.arange(block_k)
+    bias = jnp.where(kk[None, :] <= q_idx[:, None] + (skv - sq),
+                     0.0, -1e30).astype(s.dtype)
+    return s + bias[None]
+
+
+def _pick_block(skv: int, block_k: int) -> int:
+    block_k = min(block_k, skv)
+    while skv % block_k:
+        block_k -= 1          # largest divisor <= requested (worst case 1)
+    return block_k
+
+
+def _chunk_attn_fwd_impl(q, k, v, causal, block_k):
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    block_k = _pick_block(skv, block_k)
+    nb = skv // block_k
+    qf = q.astype(jnp.float32)
+    scale = 1.0 / (d ** 0.5)
+    q_idx = jnp.arange(sq)
+
+    def step(carry, jb):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, jb * block_k, block_k, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, jb * block_k, block_k, 1)
+        s = jnp.einsum("bqd,bkd->bqk", qf, ks.astype(jnp.float32)) * scale
+        if causal:
+            s = _mask_block(s, jb, block_k, q_idx, skv, sq)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bqk,bkd->bqd", p,
+                                       vs.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((bh, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((bh, sq, 1), jnp.float32)
+    a0 = jnp.zeros((bh, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nb))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))       # [bh, sq, 1]
+    return out, lse
+
+
+def _chunk_attn_fwd(q, k, v, causal, block_k):
+    out, lse = _chunk_attn_fwd_impl(q, k, v, causal, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _chunk_attn_bwd(causal, block_k, res, dout):
+    q, k, v, out, lse = res
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    block_k = _pick_block(skv, block_k)
+    nb = skv // block_k
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32)
+    do = dout.astype(jnp.float32)
+    q_idx = jnp.arange(sq)
+    delta = jnp.sum(do * out.astype(jnp.float32), -1, keepdims=True)
+
+    def step(dq, jb):
+        ks = jax.lax.dynamic_slice_in_dim(k, jb * block_k, block_k, 1) \
+            .astype(jnp.float32)
+        vs = jax.lax.dynamic_slice_in_dim(v, jb * block_k, block_k, 1) \
+            .astype(jnp.float32)
+        s = jnp.einsum("bqd,bkd->bqk", qf, ks) * scale
+        if causal:
+            s = _mask_block(s, jb, block_k, q_idx, skv, sq)
+        p = jnp.exp(s - lse)                           # [bh, sq, bk]
+        dv = jnp.einsum("bqk,bqd->bkd", p, do)
+        dp = jnp.einsum("bqd,bkd->bqk", do, vs)
+        ds = p * (dp - delta) * scale
+        dq = dq + jnp.einsum("bqk,bkd->bqd", ds, ks)
+        dk = jnp.einsum("bqk,bqd->bkd", ds, qf)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((bh, sq, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, jnp.arange(nb))
+    dk = dks.transpose(1, 0, 2, 3).reshape(bh, skv, d)
+    dv = dvs.transpose(1, 0, 2, 3).reshape(bh, skv, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+chunked_attention.defvjp(_chunk_attn_fwd, _chunk_attn_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def grouped_chunked_attention(qg, k, v, causal: bool = True,
+                              block_k: int = 512):
+    """Flash attention over grouped heads: qg [B, Hkv, G, Sq, D];
+    k/v [B, Hkv, Skv, D]. O(S) memory both passes; heads stay sharded."""
+    out, _ = _gchunk_fwd_impl(qg, k, v, causal, block_k)
+    return out
+
+
+def _gchunk_fwd_impl(qg, k, v, causal, block_k):
+    b, h, g, sq, d = qg.shape
+    skv = k.shape[2]
+    block_k = _pick_block(skv, block_k)
+    nb = skv // block_k
+    qf = qg.astype(jnp.float32)
+    scale = 1.0 / (d ** 0.5)
+    q_idx = jnp.arange(sq)
+
+    def step(carry, jb):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, jb * block_k, block_k, 2)
+        vs = jax.lax.dynamic_slice_in_dim(v, jb * block_k, block_k, 2)
+        sc = jnp.einsum("bhgqd,bhkd->bhgqk", qf,
+                        ks.astype(jnp.float32)) * scale
+        if causal:
+            kk = jb * block_k + jnp.arange(block_k)
+            bias = jnp.where(kk[None, :] <= q_idx[:, None] + (skv - sq),
+                             0.0, -1e30)
+            sc = sc + bias
+        m_new = jnp.maximum(m, sc.max(-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                       vs.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, g, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nb))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(qg.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    return out, lse
+
+
+def _gchunk_fwd(qg, k, v, causal, block_k):
+    out, lse = _gchunk_fwd_impl(qg, k, v, causal, block_k)
+    return out, (qg, k, v, out, lse)
+
+
+def _gchunk_bwd(causal, block_k, res, dout):
+    qg, k, v, out, lse = res
+    b, h, g, sq, d = qg.shape
+    skv = k.shape[2]
+    block_k = _pick_block(skv, block_k)
+    nb = skv // block_k
+    scale = 1.0 / (d ** 0.5)
+    qf = qg.astype(jnp.float32)
+    do = dout.astype(jnp.float32)
+    q_idx = jnp.arange(sq)
+    delta = jnp.sum(do * out.astype(jnp.float32), -1, keepdims=True)
+
+    def step(dq, jb):
+        ks = jax.lax.dynamic_slice_in_dim(k, jb * block_k, block_k, 2) \
+            .astype(jnp.float32)
+        vs = jax.lax.dynamic_slice_in_dim(v, jb * block_k, block_k, 2) \
+            .astype(jnp.float32)
+        sc = jnp.einsum("bhgqd,bhkd->bhgqk", qf, ks) * scale
+        if causal:
+            kk = jb * block_k + jnp.arange(block_k)
+            bias = jnp.where(kk[None, :] <= q_idx[:, None] + (skv - sq),
+                             0.0, -1e30)
+            sc = sc + bias
+        p = jnp.exp(sc - lse)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, do)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do, vs)
+        ds = p * (dp - delta) * scale
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds, ks)
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((b, h, g, sq, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, jnp.arange(nb))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(b, h, skv, d)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(b, h, skv, d)
+    return dq.astype(qg.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+grouped_chunked_attention.defvjp(_gchunk_fwd, _gchunk_bwd)
+
+
+def decode_mha(q, k, v, lengths, impl: str = "pallas",
+               interpret: bool = True):
+    """Decode attention. q [B, Hq, 1, D], k/v [B, Hkv, S, D], lengths [B].
+
+    Non-pallas path is grouped 5-D (no head flatten, no KV repeat) so the
+    sharded cache stays sharded — decode is KV-streaming-bound and an
+    accidental head all-gather costs GBs per layer (§Perf)."""
+    b, hq, one, d = q.shape
+    hkv = k.shape[1]
+    if impl == "pallas":
+        if hkv != hq:
+            rep = hq // hkv
+            k = jnp.repeat(k, rep, axis=1)
+            v = jnp.repeat(v, rep, axis=1)
+        qf = q.reshape(b * hq, 1, d)
+        kf = k.reshape(b * hq, -1, d)
+        vf = v.reshape(b * hq, -1, d)
+        lens = jnp.repeat(lengths, hq)
+        out = _dec.decode_attention(qf, kf, vf, lens, interpret=interpret)
+        return out.reshape(b, hq, 1, d)
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, 1, d)
+    out = _grouped_ref(qg, k, v, causal=False, lengths=lengths)
+    return out.reshape(b, hq, 1, d)
+
+
+# -- recurrences -----------------------------------------------------------------
+
+def ssm(x, dt, a, b, c, d, h0, impl: str = "pallas", interpret: bool = True):
+    if impl == "pallas":
+        return __import__("repro.kernels.ssm_scan", fromlist=["ssm_scan"]) \
+            .ssm_scan(x, dt, a, b, c, d, h0, interpret=interpret)
+    return ssm_assoc(x, dt, a, b, c, d, h0)
+
+
+def ssm_assoc(x, dt, a, b, c, d, h0):
+    """Associative-scan formulation (dry-run path): the recurrence
+    h_t = dA_t·h_{t-1} + u_t composes as (A1,B1)∘(A2,B2) = (A1A2, A2B1+B2)."""
+    da = jnp.exp(jnp.einsum("bsd,dn->bsdn", dt.astype(jnp.float32),
+                            a.astype(jnp.float32)))
+    u = jnp.einsum("bsd,bsn->bsdn", (dt * x).astype(jnp.float32),
+                   b.astype(jnp.float32))
+    u = u.at[:, 0].add(da[:, 0] * h0.astype(jnp.float32))
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (da, u), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hh, c.astype(jnp.float32)) \
+        + d.astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(x.dtype), hh[:, -1]
+
+
+def ssm_chunked(x, dt, a, b, c, d, h0, chunk: int = 128):
+    """Memory-sane jnp selective scan: lax.scan over sequence chunks with a
+    checkpointed body; the [B, C, Di, N] outer-product tensor exists only
+    transiently inside one chunk (recomputed in backward). Carries only the
+    [B, Di, N] state across chunks — O(S·Di + C·Di·N) instead of O(S·Di·N)."""
+    bsz, s, di = x.shape
+    n = a.shape[1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nb = s // chunk
+    af = a.astype(jnp.float32)
+    dsk = d.astype(jnp.float32)
+
+    def body(h, xs):
+        xc, dtc, bc, cc = xs        # [B,C,Di], [B,C,Di], [B,C,N], [B,C,N]
+        xcf = xc.astype(jnp.float32)
+        dtf = dtc.astype(jnp.float32)
+        da = jnp.exp(jnp.einsum("bsd,dn->bsdn", dtf, af))
+        u = jnp.einsum("bsd,bsn->bsdn", dtf * xcf, bc.astype(jnp.float32))
+        u = u.at[:, 0].add(da[:, 0] * h)
+
+        def combine(p1, p2):
+            a1, b1 = p1
+            a2, b2 = p2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hh = jax.lax.associative_scan(combine, (da, u), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hh, cc.astype(jnp.float32)) \
+            + dsk * xcf
+        return hh[:, -1], y.astype(x.dtype)
+
+    body = jax.checkpoint(body)
+
+    def split(t):                   # [B, S, F] -> [nb, B, C, F]
+        return t.reshape(bsz, nb, chunk, t.shape[-1]).swapaxes(0, 1)
+
+    hT, ys = jax.lax.scan(body, h0.astype(jnp.float32),
+                          (split(x), split(dt), split(b), split(c)))
+    y = ys.swapaxes(0, 1).reshape(bsz, s, di)
+    return y, hT
+
+
+def rg_lru_chunked(a, b, h0, chunk: int = 256):
+    """Chunked + checkpointed diagonal gated scan (same carry discipline)."""
+    bsz, s, d = a.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nb = s // chunk
+
+    def body(h, xs):
+        ac, bc = xs
+        acf = ac.astype(jnp.float32)
+        bcf = bc.astype(jnp.float32)
+        bcf = bcf.at[:, 0].add(acf[:, 0] * h)
+
+        def combine(p1, p2):
+            a1, b1 = p1
+            a2, b2 = p2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hh = jax.lax.associative_scan(combine, (acf, bcf), axis=1)
+        return hh[:, -1], hh.astype(a.dtype)
+
+    body = jax.checkpoint(body)
+
+    def split(t):
+        return t.reshape(bsz, nb, chunk, t.shape[-1]).swapaxes(0, 1)
+
+    hT, ys = jax.lax.scan(body, h0.astype(jnp.float32),
+                          (split(a), split(b)))
+    return ys.swapaxes(0, 1).reshape(bsz, s, d), hT
+
+
+def rg_lru_scan(a, b, h0, impl: str = "pallas", interpret: bool = True):
+    if impl == "pallas":
+        return _rg.rg_lru(a, b, h0, interpret=interpret)
+    return rg_lru_assoc(a, b, h0)
+
+
+def rg_lru_assoc(a, b, h0):
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    return h.astype(a.dtype), h[:, -1]
+
+
+# -- MoE dispatch/combine -----------------------------------------------------------
+
+def moe_dispatch_combine(tokens, gates, expert_idx, n_experts: int,
+                         capacity: int, expert_fn, impl: str = "pallas",
+                         interpret: bool = True):
+    """Revet-style MoE: compaction dispatch -> expert_fn [E, C, D] -> weighted
+    combine. tokens [T, D]; gates/expert_idx [T, K] (top-k router output)."""
+    t, dmodel = tokens.shape
+    k = expert_idx.shape[1]
+    flat_e = expert_idx.reshape(-1)                       # [A]
+    flat_g = gates.reshape(-1)
+    tok_of_a = jnp.repeat(jnp.arange(t), k)
+    # position within expert = the allocator pointer stream (one cumsum)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+
+    gathered = jnp.take(tokens, tok_of_a, axis=0)         # [A, D]
+    if impl == "pallas":
+        dispatched = _md.moe_dispatch(gathered, flat_e, flat_pos, n_experts,
+                                      capacity, interpret=interpret)
+    else:
+        keep = (flat_pos < capacity)
+        disp = jnp.zeros((n_experts, capacity, dmodel), tokens.dtype)
+        dispatched = disp.at[flat_e, jnp.clip(flat_pos, 0, capacity - 1)] \
+            .add(jnp.where(keep[:, None], gathered, 0))
+    # EP hint: pin the dispatch buffer to the expert-parallel layout so XLA
+    # moves tokens (all-to-all, O(T*D)) instead of gathering expert weights
+    from ..distributed import sharding as _sh
+    dispatched = _sh.act_hint(dispatched, "model", None, None)
+    out_e = expert_fn(dispatched)                         # [E, C, D]
+    out_e = _sh.act_hint(out_e, "model", None, None)
+    # combine: gather each assignment's expert output, weight, scatter-add
+    kept = flat_pos < capacity
+    res = out_e[flat_e, jnp.clip(flat_pos, 0, capacity - 1)]
+    res = jnp.where(kept[:, None], res, 0) * flat_g[:, None]
+    out = jnp.zeros_like(tokens).at[tok_of_a].add(
+        res.astype(tokens.dtype))
+    return out
+
+
+def moe_dense_einsum(tokens, gates, expert_idx, n_experts: int,
+                     capacity: int, expert_fn):
+    """The MapReduce-style dense one-hot dispatch baseline (what Spatial
+    could express): full [T, E, C] dispatch tensors, no compaction."""
+    t, dmodel = tokens.shape
+    k = expert_idx.shape[1]
+    flat_e = expert_idx.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    disp = (jax.nn.one_hot(flat_e, n_experts, dtype=tokens.dtype)[:, :, None]
+            * jax.nn.one_hot(jnp.clip(flat_pos, 0, capacity - 1), capacity,
+                             dtype=tokens.dtype)[:, None, :])
+    disp = disp * (flat_pos < capacity)[:, None, None].astype(tokens.dtype)
+    tok_of_a = jnp.repeat(jnp.arange(t), k)
+    gathered = jnp.take(tokens, tok_of_a, axis=0)
+    dispatched = jnp.einsum("aec,ad->ecd", disp, gathered)
+    out_e = expert_fn(dispatched)
+    res = jnp.einsum("aec,ecd->ad", disp, out_e) \
+        * gates.reshape(-1)[:, None]
+    return jnp.zeros_like(tokens).at[tok_of_a].add(res.astype(tokens.dtype))

@@ -1,0 +1,148 @@
+"""Pure-jnp/numpy oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth; tests sweep shapes/dtypes and
+assert the kernels (interpret=True) match these exactly/allclose.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# -- stream_compact ----------------------------------------------------------
+
+def compact_ref(mask: np.ndarray, vals: np.ndarray):
+    """Returns (compacted [N, D] zero-padded, count)."""
+    mask = np.asarray(mask) != 0
+    vals = np.asarray(vals)
+    out = np.zeros_like(vals)
+    kept = vals[mask]
+    out[: len(kept)] = kept
+    return out, int(mask.sum())
+
+
+# -- segment_reduce ----------------------------------------------------------
+
+def segment_reduce_ref(kinds, vals, init: float, op: str = "add"):
+    """Token-level oracle mirroring the VM reduce output (§III-B(b)).
+    Returns (out_kinds list, out_vals list, carry_acc, carry_open)."""
+    import math
+    fns = {"add": lambda a, b: a + b, "min": min, "max": max}
+    f = fns[op]
+    acc, opened = init, False
+    ok, ov = [], []
+    for k, v in zip(np.asarray(kinds), np.asarray(vals)):
+        k = int(k)
+        if k == 0:
+            acc = f(acc, float(v))
+            opened = True
+        elif k == 1:
+            ok.append(0)
+            ov.append(acc)
+            acc, opened = init, False
+        else:
+            if opened:
+                ok.append(0)
+                ov.append(acc)
+                acc, opened = init, False
+            ok.append(k - 1)
+            ov.append(0.0)
+    return ok, ov, acc, opened
+
+
+# -- hash_probe ---------------------------------------------------------------
+
+def _mix_ref(x: int) -> int:
+    x &= 0xFFFFFFFF
+    x ^= x >> 16
+    x = x * 0x45D9F3B & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+def hash_probe_ref(keys, table_k, table_v, n_slots: int,
+                   max_probes: int = 16):
+    vals, found = [], []
+    for key in np.asarray(keys):
+        h = _mix_ref(int(key)) % n_slots
+        v, f = 0, 0
+        for p in range(max_probes):
+            ck = int(table_k[h + p])
+            if ck == int(key):
+                v, f = int(table_v[h + p]), 1
+                break
+            if ck == 0:
+                break
+        vals.append(v)
+        found.append(f)
+    return np.array(vals), np.array(found)
+
+
+# -- attention ----------------------------------------------------------------
+
+def attention_ref(q, k, v, causal: bool = True, lengths=None):
+    """q [BH, Sq, D], k/v [BH, Skv, D]. Full-softmax reference in f32."""
+    q = jnp.asarray(q, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(d)
+    if causal:
+        sq, sk = s.shape[-2], s.shape[-1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None], s, -1e30)
+    if lengths is not None:
+        kidx = jnp.arange(s.shape[-1])
+        s = jnp.where(kidx[None, None, :] < lengths[:, None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+# -- ssm_scan -----------------------------------------------------------------
+
+def ssm_scan_ref(x, dt, a, b, c, d, h0):
+    """Sequential reference of the Mamba-1 recurrence (f64 for stability)."""
+    x = np.asarray(x, np.float64)
+    dt = np.asarray(dt, np.float64)
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    c = np.asarray(c, np.float64)
+    d = np.asarray(d, np.float64)
+    h = np.asarray(h0, np.float64).copy()
+    bs, s, di = x.shape
+    y = np.zeros((bs, s, di))
+    for bi in range(bs):
+        hb = h[bi]
+        for t in range(s):
+            da = np.exp(dt[bi, t][:, None] * a)
+            hb = da * hb + (dt[bi, t] * x[bi, t])[:, None] * b[bi, t][None, :]
+            y[bi, t] = (hb * c[bi, t][None, :]).sum(1) + d * x[bi, t]
+        h[bi] = hb
+    return y, h
+
+
+# -- rg_lru -------------------------------------------------------------------
+
+def rg_lru_ref(a, b, h0):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    h = np.asarray(h0, np.float64).copy()
+    bs, s, d = a.shape
+    y = np.zeros((bs, s, d))
+    for t in range(s):
+        h = a[:, t] * h + b[:, t]
+        y[:, t] = h
+    return y, h
+
+
+# -- moe_dispatch -------------------------------------------------------------
+
+def moe_dispatch_ref(tokens, expert_idx, positions, n_experts: int,
+                     capacity: int):
+    tokens = np.asarray(tokens)
+    out = np.zeros((n_experts, capacity, tokens.shape[1]), tokens.dtype)
+    for a, (e, p) in enumerate(zip(expert_idx, positions)):
+        if p < capacity:
+            out[int(e), int(p)] = tokens[a]
+    return out

@@ -1,0 +1,75 @@
+"""rg_lru — Real-Gated Linear Recurrent Unit (recurrentgemma-9b path).
+
+Diagonal gated linear scan:  h_t = a_t ⊙ h_{t-1} + b_t, with a_t/b_t
+precomputed by the layer (a = exp(-c·softplus(Λ)·r_t), b = √(1-a²)·(i_t⊙x_t)).
+
+Grid = (batch, d blocks, seq chunks), chunk-sequential with the [Bd] hidden
+state in VMEM scratch — the same carry pattern as ssm_scan but with a purely
+diagonal state, so the inner loop is a fused multiply-add over lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hT_ref, h_scr, *,
+                  chunk: int, chunks: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _():
+        h_scr[0, :] = h0_ref[0].astype(jnp.float32)    # [Bd]
+
+    a = a_ref[0].astype(jnp.float32)     # [T, Bd]
+    b = b_ref[0].astype(jnp.float32)     # [T, Bd]
+
+    def step(t, carry):
+        h, y = carry
+        h = a[t] * h + b[t]
+        return h, y.at[t].set(h)
+
+    y0 = jnp.zeros_like(a)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_scr[0], y0))
+    h_scr[0, :] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(s == chunks - 1)
+    def _():
+        hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def rg_lru(a: jax.Array, b: jax.Array, h0: jax.Array, chunk: int = 128,
+           block_d: int = 512, interpret: bool = True
+           ) -> tuple[jax.Array, jax.Array]:
+    """a/b [B, S, D]; h0 [B, D]. Returns (h [B, S, D], hT [B, D])."""
+    bsz, seq, d = a.shape
+    chunk = min(chunk, seq)
+    block_d = min(block_d, d)
+    assert seq % chunk == 0 and d % block_d == 0
+    chunks = seq // chunk
+    y, hT = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk, chunks=chunks),
+        grid=(bsz, d // block_d, chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((1, block_d), lambda b_, d_, s_: (b_, d_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((1, block_d), lambda b_, d_, s_: (b_, d_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, seq, d), a.dtype),
+            jax.ShapeDtypeStruct((bsz, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, hT

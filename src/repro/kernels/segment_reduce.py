@@ -1,0 +1,121 @@
+"""segment_reduce — SLTF reduction (§III-B(b)) as a Pallas TPU kernel.
+
+Reduces the innermost ragged dimension of a barrier-delimited stream: at
+every Ω1 the kernel emits the segment's accumulated value (``init`` for empty
+groups — the [[]] vs [] distinction of §III-A); higher barriers Ωn emit the
+trailing implied group (if non-empty) plus the lowered barrier Ω(n-1).
+
+Per-segment sums are computed with the same one-hot-matmul trick as
+``stream_compact``: segment ids are a cumulative sum of the barrier mask, and
+``onehot(seg_id)^T @ (vals · is_data)`` yields all segment sums in one MXU
+pass. The accumulator carries across grid steps through VMEM scratch, so one
+call handles arbitrarily long streams.
+
+Each input position yields up to two output slots (data emission, barrier
+emission); ``ops.py`` flattens and compacts them with ``stream_compact``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 256
+
+# output slot encoding in out_kind: -1 = no token, 0 = data, n>0 = Ω_n
+NOTHING = -1
+
+
+def _segred_kernel(kinds_ref, vals_ref, init_ref,
+                   out_kind_ref, out_val_ref, carry_out_ref,
+                   acc, opened):
+    i = pl.program_id(0)
+    init = init_ref[0]
+
+    @pl.when(i == 0)
+    def _():
+        acc[0] = jnp.float32(init)
+        opened[0] = jnp.int32(0)
+
+    kinds = kinds_ref[...]                       # [B] int32
+    vals = vals_ref[...].astype(jnp.float32)     # [B]
+    B = kinds.shape[0]
+    is_bar = (kinds > 0)
+    is_one = (kinds == 1)
+    is_hi = (kinds > 1)
+    is_data = ~is_bar
+
+    # segment ids: 0..nseg; barrier at i closes segment seg_id[i]
+    bar_f = is_bar.astype(jnp.float32)
+    seg = (jnp.cumsum(bar_f) - bar_f)            # [B] float ids
+    rows = jax.lax.broadcasted_iota(jnp.float32, (B, B), 0)
+    onehot = jnp.where(seg[None, :] == rows, 1.0, 0.0)       # [S, B]
+    dvals = jnp.where(is_data, vals, 0.0)
+    seg_sum = jax.lax.dot(onehot, dvals[:, None],
+                          preferred_element_type=jnp.float32)[:, 0]
+    seg_cnt = jax.lax.dot(onehot, is_data.astype(jnp.float32)[:, None],
+                          preferred_element_type=jnp.float32)[:, 0]
+
+    # fold the carried accumulator into segment 0
+    seg_sum = seg_sum.at[0].add(acc[0] - init)
+    seg_cnt = seg_cnt.at[0].add(opened[0].astype(jnp.float32))
+
+    seg_i = seg.astype(jnp.int32)
+    my_sum = init + jnp.take(seg_sum, seg_i, axis=0)
+    my_cnt = jnp.take(seg_cnt, seg_i, axis=0)
+    group_open = my_cnt > 0
+
+    # slot 0: data emission (Ω1 always; Ωn>1 only for a non-empty group)
+    emit_data = is_one | (is_hi & group_open)
+    out_kind_ref[:, 0] = jnp.where(emit_data, 0, NOTHING)
+    out_val_ref[:, 0] = jnp.where(emit_data, my_sum, 0.0)
+    # slot 1: lowered barrier for Ωn>1
+    out_kind_ref[:, 1] = jnp.where(is_hi, kinds - 1, NOTHING)
+    out_val_ref[:, 1] = jnp.zeros_like(vals)
+
+    # carry: accumulator state after the block
+    nbar = jnp.sum(bar_f)
+    tail_sum = init + jnp.take(seg_sum, nbar.astype(jnp.int32), axis=0)
+    tail_cnt = jnp.take(seg_cnt, nbar.astype(jnp.int32), axis=0)
+    has_bar = nbar > 0
+    acc[0] = jnp.where(has_bar, tail_sum, init + seg_sum[0])
+    opened[0] = jnp.where(has_bar, tail_cnt, seg_cnt[0]).astype(jnp.int32)
+    carry_out_ref[0] = acc[0]
+    carry_out_ref[1] = opened[0].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segment_reduce_blocks(kinds: jax.Array, vals: jax.Array, init: float,
+                          block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """kinds [N] (0=data, n>0=Ωn), vals [N] f32. Returns
+    (out_kind [N, 2], out_val [N, 2], carry [2])."""
+    n = kinds.shape[0]
+    assert n % block == 0
+    nb = n // block
+    init_arr = jnp.asarray([init], jnp.float32)
+    out_kind, out_val, carry = pl.pallas_call(
+        _segred_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((block, 2), lambda i: (i, 0)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 2), jnp.int32),
+            jax.ShapeDtypeStruct((n, 2), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1,), jnp.float32),
+                        pltpu.VMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(kinds.astype(jnp.int32), vals.astype(jnp.float32), init_arr)
+    return out_kind, out_val, carry

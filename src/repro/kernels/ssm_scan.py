@@ -1,0 +1,93 @@
+"""ssm_scan — Mamba-1 selective-scan recurrence (falcon-mamba-7b path).
+
+    h_t = exp(dt_t ⊙ A) · h_{t-1} + (dt_t · x_t) ⊗ B_t
+    y_t = (h_t · C_t).sum(state) + D ⊙ x_t
+
+Grid = (batch, d_inner blocks, seq chunks) with the chunk dimension
+sequential; the [Bd, N] state lives in VMEM scratch and carries across
+chunks. Within a chunk the recurrence steps with a fori_loop — the state
+update is a rank-1 outer product per step, VPU-bound, which is why d_inner is
+the vectorized (lane) dimension. ``ops.py`` also exposes a pure-jnp
+associative-scan formulation used by the dry-run path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, h0_ref,
+                y_ref, hT_ref, h_scr, *, chunk: int, chunks: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)       # [Bd, N]
+
+    x = x_ref[0].astype(jnp.float32)      # [T, Bd]
+    dt = dt_ref[0].astype(jnp.float32)    # [T, Bd]
+    a = a_ref[...].astype(jnp.float32)    # [Bd, N]
+    b = b_ref[0].astype(jnp.float32)      # [T, N]
+    c = c_ref[0].astype(jnp.float32)      # [T, N]
+    dskip = d_ref[...].astype(jnp.float32)  # [Bd]
+
+    def step(t, carry):
+        h, y = carry
+        dtt = dt[t][:, None]                          # [Bd, 1]
+        da = jnp.exp(dtt * a)                         # [Bd, N]
+        hb = (dtt * x[t][:, None]) * b[t][None, :]    # [Bd, N]
+        h = da * h + hb
+        yt = (h * c[t][None, :]).sum(axis=1) + dskip * x[t]
+        return h, y.at[t].set(yt)
+
+    y0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h_scr[...], y0))
+    h_scr[...] = h
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(s == chunks - 1)
+    def _():
+        hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def ssm_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, d: jax.Array, h0: jax.Array,
+             chunk: int = 64, block_d: int = 128,
+             interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """x/dt [B, S, Di]; a [Di, N]; b/c [B, S, N]; d [Di]; h0 [B, Di, N].
+    Returns (y [B, S, Di], hT [B, Di, N])."""
+    bsz, seq, di = x.shape
+    n = a.shape[1]
+    chunk = min(chunk, seq)
+    block_d = min(block_d, di)
+    assert seq % chunk == 0 and di % block_d == 0
+    chunks = seq // chunk
+    y, hT = pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=chunk, chunks=chunks),
+        grid=(bsz, di // block_d, chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((block_d, n), lambda b_, d_, s_: (d_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, d_, s_: (b_, s_, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, d_, s_: (b_, s_, 0)),
+            pl.BlockSpec((block_d,), lambda b_, d_, s_: (d_,)),
+            pl.BlockSpec((1, block_d, n), lambda b_, d_, s_: (b_, d_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b_, d_, s_: (b_, s_, d_)),
+            pl.BlockSpec((1, block_d, n), lambda b_, d_, s_: (b_, d_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, seq, di), x.dtype),
+            jax.ShapeDtypeStruct((bsz, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d, h0)
+    return y, hT

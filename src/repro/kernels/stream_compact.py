@@ -1,0 +1,64 @@
+"""stream_compact — the filter primitive's hot loop as a Pallas TPU kernel.
+
+Compaction is how dataflow threads keep lanes dense under divergence (the
+paper's filtering stage, §III-B(c)). The TPU has no cross-lane scatter, so we
+*reformulate compaction as a one-hot matmul on the MXU*: the exclusive prefix
+sum of the keep-mask gives each surviving lane its output row; the one-hot
+matrix P[j, i] = (prefix[i] == j) & mask[i] gathers survivors densely via
+``P @ values`` — a systolic-array-native permutation (see DESIGN.md
+hardware-adaptation notes).
+
+One grid step compacts one [BLOCK, D] tile held in VMEM; the jit wrapper in
+``ops.py`` assembles blocks with a cross-block offset gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _compact_kernel(mask_ref, val_ref, out_ref, cnt_ref):
+    m = (mask_ref[...] != 0)                      # [B]
+    mi = m.astype(jnp.float32)
+    prefix = jnp.cumsum(mi) - mi                  # exclusive output positions
+    B = m.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.float32, (B, B), 0)
+    # P[j, i] = 1 iff lane i survives into output row j
+    P = jnp.where((prefix[None, :] == rows) & m[None, :], 1.0, 0.0)
+    out_ref[...] = jax.lax.dot(
+        P, val_ref[...], preferred_element_type=jnp.float32)
+    cnt_ref[...] = jnp.sum(m.astype(jnp.int32)).reshape(1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def compact_blocks(mask: jax.Array, vals: jax.Array,
+                   block: int = DEFAULT_BLOCK, interpret: bool = True
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Blockwise compaction. mask [N] int32/bool, vals [N, D] float32.
+    Returns (per-block compacted [nb, block, D], per-block counts [nb])."""
+    n, d = vals.shape
+    assert n % block == 0, "pad N to a multiple of block"
+    nb = n // block
+    out, cnt = pl.pallas_call(
+        _compact_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mask.astype(jnp.int32), vals.astype(jnp.float32))
+    return out.reshape(nb, block, d), cnt

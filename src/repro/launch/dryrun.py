@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below may import jax.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, and extract the roofline raw material.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell this produces artifacts/dryrun/<mesh>/<arch>__<shape>.json with:
+  * memory_analysis (per-device bytes: args/outputs/temps/generated code),
+  * cost_analysis (HLO FLOPs / bytes accessed),
+  * collective bytes by kind parsed from the compiled HLO (scan-body ops
+    scaled by the layer trip count — see _collective_bytes),
+  * analytic MODEL_FLOPS and sizes for the §Roofline terms.
+
+Success of ``.lower().compile()`` for all cells on BOTH meshes is the
+multi-pod runnability deliverable; failures are sharding bugs.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, get_config
+from ..configs.base import SHAPES, ModelConfig, ShapeConfig, cells_for
+from ..distributed import sharding as sh
+from ..models.zoo import get_model
+from ..optim import adamw
+from .mesh import make_production_mesh
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+# TPU v5e roofline constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+def _opt_cfg():
+    return adamw.OptConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
+
+
+def build_train_step(zoo, impl: str = "chunked", microbatch: int = 1):
+    ocfg = _opt_cfg()
+
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: zoo.loss_fn(p, batch, impl=impl))(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            # gradient accumulation: activations shrink by the microbatch
+            # factor; grads accumulate in f32 across the scan
+            def mb(carry, sub):
+                acc_loss, acc_g = carry
+                loss, g = grad_of(params, sub)
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_loss + loss, acc_g), None
+            split = jax.tree.map(
+                lambda t: t.reshape((microbatch, t.shape[0] // microbatch)
+                                    + t.shape[1:]), batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(mb, (jnp.float32(0.0), zero_g),
+                                            split)
+            loss = loss / microbatch
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+        else:
+            loss, grads = grad_of(params, batch)
+        params, opt_state, metrics = adamw.apply(params, grads, opt_state,
+                                                 ocfg)
+        return params, opt_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def build_prefill_step(zoo, max_len: int, impl: str = "chunked"):
+    def prefill_step(params, batch):
+        return zoo.prefill(params, batch, max_len, impl=impl)
+    return prefill_step
+
+
+def build_serve_step(zoo):
+    def serve_step(params, token, cache, position):
+        return zoo.decode_step(params, token, cache, position)
+    return serve_step
+
+
+def lower_cell(arch: str, shape_name: str, mesh, impl: str = "chunked",
+               microbatch: int = 1, act_hints: bool = True,
+               kv_int8: bool = False):
+    """Returns (lowered, aux) for one (arch × shape) cell on ``mesh``."""
+    sh.set_act_mesh(mesh if act_hints else None)
+    cfg = get_config(arch)
+    zoo = get_model(cfg)
+    shape = SHAPES[shape_name]
+    pspec = zoo.spec()
+    params_abs = zoo.abstract_params()
+    params_shard = sh.param_shardings(pspec, mesh)
+
+    if shape.kind == "train":
+        opt_abs = adamw.abstract_state(params_abs)
+        opt_shard = {"m": sh.zero_shardings(pspec, mesh),
+                     "v": sh.zero_shardings(pspec, mesh),
+                     "step": sh.replicated(mesh)}
+        batch_abs = zoo.batch_specs(shape)
+        batch_shard = sh.batch_shardings(batch_abs, mesh)
+        fn = build_train_step(zoo, impl, microbatch=microbatch)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_shard, opt_shard, batch_shard),
+            out_shardings=(params_shard, opt_shard, sh.replicated(mesh)),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs = zoo.batch_specs(shape)
+        batch_shard = sh.batch_shardings(batch_abs, mesh)
+        cache_abs = zoo.abstract_cache(shape.global_batch, shape.seq_len)
+        cache_shard = sh.cache_shardings(cache_abs, mesh)
+        fn = build_prefill_step(zoo, shape.seq_len, impl)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_shard, batch_shard),
+            out_shardings=(sh.replicated(mesh), cache_shard,
+                           sh.replicated(mesh)))
+        lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode / long_decode: one new token against a seq_len KV cache
+        if kv_int8:
+            from ..models import transformer as _T
+            assert cfg.family in ("dense", "vlm"), "kv-int8: dense-family"
+            dec = {
+                "token": jax.ShapeDtypeStruct(
+                    (shape.global_batch, 1), jnp.int32),
+                "cache": _T.abstract_cache_q8(
+                    cfg, shape.global_batch,
+                    shape.seq_len + (cfg.n_patches
+                                     if cfg.family == "vlm" else 0)),
+                "position": jax.ShapeDtypeStruct(
+                    (shape.global_batch,), jnp.int32),
+            }
+            fn = lambda p, t, c, pos: _T.decode_step_q8(p, t, c, pos, cfg)
+        else:
+            dec = zoo.decode_input_specs(shape)
+        cache_shard = sh.cache_shardings(dec["cache"], mesh)
+        tok_shard = sh.batch_shardings(
+            {"token": dec["token"]}, mesh)["token"]
+        pos_shard = sh.batch_shardings(
+            {"position": dec["position"]}, mesh)["position"]
+        if not kv_int8:
+            fn = build_serve_step(zoo)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_shard, tok_shard, cache_shard, pos_shard),
+            out_shardings=(sh.replicated(mesh), cache_shard, pos_shard),
+            donate_argnums=(2,))
+        lowered = jitted.lower(params_abs, dec["token"], dec["cache"],
+                               dec["position"])
+    return lowered, {"cfg": cfg, "shape": shape}
+
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(
+    r"(f32|bf16|f16|s32|u32|s8|u8|f64|s64|pred)\[([\d,]*)\]")
+_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "f64": 8, "s64": 8, "pred": 1}
+
+
+def _line_bytes(segment: str) -> int:
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes += n * _BYTES[dt]
+    return nbytes
+
+
+_WHILE_ATTR_RE = re.compile(r"(?:body|condition)=%([\w.\-]+)")
+
+
+def _collective_bytes(hlo_text: str, loop_scale: int) -> dict:
+    """Sum output bytes of collective ops (the shapes between '=' and the op
+    mnemonic, e.g. ``%ar = f32[16,4096,896] all-reduce(...)``).
+
+    cost_analysis reports while (scan) bodies once; collectives found inside
+    computations referenced as ``body=%X``/``condition=%X`` of any while op
+    are scaled by ``loop_scale`` (the layer count — the layer scan is the
+    only collective-bearing loop in these programs; heuristic documented in
+    DESIGN.md). Other non-entry computations (fusions etc.) count once."""
+    # pass 1: which computations are while bodies/conditions?
+    loop_comps: set[str] = set()
+    for line in hlo_text.splitlines():
+        if " while(" in line:
+            for m in _WHILE_ATTR_RE.finditer(line):
+                loop_comps.add(m.group(1))
+
+    totals: dict[str, float] = {}
+    cur_comp = ""
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY"):
+            cur_comp = "__entry__"
+            continue
+        if ls.startswith("%") and ls.endswith("{"):
+            cur_comp = ls.split(" ", 1)[0].lstrip("%")
+            continue
+        if "=" not in ls:
+            continue
+        rhs = ls.split("=", 1)[1]
+        for kind in _COLL_KINDS:
+            # match the op mnemonic itself, not tuple-element references
+            if f" {kind}(" in rhs or f" {kind}-start(" in rhs:
+                head = rhs.split(kind)[0]
+                nbytes = _line_bytes(head)
+                scale = loop_scale if cur_comp in loop_comps else 1
+                totals[kind] = totals.get(kind, 0) + nbytes * scale
+                break
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def analyze_cell(arch: str, shape_name: str, mesh_kind: str,
+                 impl: str = "chunked", save: bool = True,
+                 microbatch: int = 1, act_hints: bool = True,
+                 kv_int8: bool = False,
+                 outdir: str | None = None) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(jax.numpy.prod(jnp.asarray(list(mesh.shape.values()))))
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    t0 = time.time()
+    lowered, aux = lower_cell(arch, shape_name, mesh, impl,
+                              microbatch=microbatch, act_hints=act_hints,
+                              kv_int8=kv_int8)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {k: int(getattr(mem, k)) for k in
+                 ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes")
+                 if hasattr(mem, k)} if mem is not None else {}
+    except Exception as e:   # pragma: no cover
+        mem_d = {"error": str(e)}
+    hlo = compiled.as_text()
+    n_layers = cfg.n_layers if cfg.family != "hybrid" \
+        else max(cfg.n_layers // cfg.attn_every, 1)
+    coll = _collective_bytes(hlo, loop_scale=n_layers)
+
+    # analytic terms
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * cfg.active_params() * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * cfg.active_params() * tokens
+    else:
+        tokens = shape.global_batch          # one token per sequence
+        model_flops = 2 * cfg.active_params() * tokens
+
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": n_chips,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))},
+        "memory_analysis": mem_d,
+        "collective_bytes": coll,
+        "model_flops": model_flops,
+        "tokens": tokens,
+        "hlo_flops": hlo_flops,
+        "hlo_bytes": hlo_bytes,
+        "roofline": {
+            "compute_s": hlo_flops / (n_chips * PEAK_FLOPS)
+            if hlo_flops else 0.0,
+            "memory_s": hlo_bytes / (n_chips * HBM_BW) if hlo_bytes else 0.0,
+            "collective_s": coll.get("total", 0) / (n_chips * ICI_BW),
+        },
+        "hlo_size_chars": len(hlo),
+    }
+    if save:
+        d = os.path.join(outdir or ARTIFACTS, mesh_kind)
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"{arch}__{shape_name}.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--impl", default="chunked")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--no-act-hints", action="store_true")
+    ap.add_argument("--outdir", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in cells_for(get_config(a))]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            tag = f"{mesh_kind}/{arch}/{shape}"
+            path = os.path.join(args.outdir or ARTIFACTS, mesh_kind,
+                                f"{arch}__{shape}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            try:
+                r = analyze_cell(arch, shape, mesh_kind, impl=args.impl,
+                                 microbatch=args.microbatch,
+                                 act_hints=not args.no_act_hints,
+                                 kv_int8=args.kv_int8,
+                                 outdir=args.outdir)
+                print(f"[ok] {tag}: compile={r['compile_s']}s "
+                      f"flops={r['hlo_flops']:.3e} "
+                      f"coll={r['collective_bytes'].get('total', 0):.3e}B "
+                      f"mem={r['memory_analysis']}")
+            except Exception as e:
+                failures.append((tag, str(e)))
+                print(f"[FAIL] {tag}: {e}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         + ", ".join(t for t, _ in failures))
+    print("dry-run complete: all cells lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Encoder-decoder backbone (seamless-m4t-medium). The speech frontend is a
+STUB per the assignment: ``input_specs()`` provides precomputed 80-dim frame
+features; a linear adapter projects them into the encoder.
+
+Encoder: bidirectional self-attention + MLP. Decoder: causal self-attention,
+cross-attention over encoder output, MLP. Loss over decoder tokens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .params import P, stack
+
+FRAME_DIM = 80   # fbank features from the stubbed frontend
+
+
+def enc_layer_spec(cfg: ModelConfig) -> dict:
+    return {"ln1": L.norm_spec(cfg), "attn": L.attn_spec(cfg),
+            "ln2": L.norm_spec(cfg), "mlp": L.mlp_spec(cfg)}
+
+
+def dec_layer_spec(cfg: ModelConfig) -> dict:
+    return {"ln1": L.norm_spec(cfg), "self": L.attn_spec(cfg),
+            "ln_x": L.norm_spec(cfg), "cross": L.attn_spec(cfg),
+            "ln2": L.norm_spec(cfg), "mlp": L.mlp_spec(cfg)}
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    return {
+        "frontend": P((FRAME_DIM, cfg.d_model), (None, "embed"),
+                      cfg.param_dtype),
+        "embed": L.embed_spec(cfg),
+        "enc": stack(enc_layer_spec(cfg), cfg.enc_layers),
+        "dec": stack(dec_layer_spec(cfg), cfg.dec_layers),
+        "ln_enc": L.norm_spec(cfg),
+        "ln_f": L.norm_spec(cfg),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, impl: str = "chunked",
+           remat: bool = True):
+    """frames [B, S_enc, 80] -> encoder states [B, S_enc, D]."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = (frames.astype(params["frontend"].dtype) @ params["frontend"])
+
+    def layer(x, lp):
+        h, _ = L.attention(lp["attn"], L.apply_norm(lp["ln1"], x, cfg), cfg,
+                           positions=positions, impl=impl, causal=False)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        return x
+
+    f = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(lambda x, lp: (f(x, lp), None), x, params["enc"])
+    return L.apply_norm(params["ln_enc"], x, cfg)
+
+
+def _dec_layer(cfg, impl, x, lp, enc_out, positions):
+    h, _ = L.attention(lp["self"], L.apply_norm(lp["ln1"], x, cfg), cfg,
+                       positions=positions, impl=impl, causal=True)
+    x = x + h
+    q_in = L.apply_norm(lp["ln_x"], x, cfg)
+    ek, ev = L.project_kv(lp["cross"], enc_out, cfg)
+    h, _ = L.attention(lp["cross"], q_in, cfg, positions=None, impl=impl,
+                       causal=False, kv_override=(ek, ev))
+    x = x + h
+    x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+    return x
+
+
+def trunk(params, frames, tokens, cfg: ModelConfig, impl: str = "chunked",
+          remat: bool = True):
+    enc_out = encode(params, frames, cfg, impl, remat)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+    f = functools.partial(_dec_layer, cfg, impl)
+    if remat:
+        f = jax.checkpoint(f)
+    x, _ = jax.lax.scan(
+        lambda x, lp: (f(x, lp, enc_out, positions), None), x, params["dec"])
+    return L.apply_norm(params["ln_f"], x, cfg)
+
+
+def forward(params, frames, tokens, cfg: ModelConfig, impl: str = "chunked",
+            remat: bool = True):
+    x = trunk(params, frames, tokens, cfg, impl, remat)
+    return L.logits(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, impl: str = "chunked",
+            fused: bool = True):
+    if fused:
+        x = trunk(params, batch["frames"], batch["tokens"], cfg, impl=impl)
+        return L.fused_xent_loss(params["embed"], x, batch["tokens"], cfg)
+    lg = forward(params, batch["frames"], batch["tokens"], cfg, impl=impl)
+    return L.xent_loss(lg[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- serving ---------------------------------------------------------------------
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16, enc_len: int = 4096):
+    kv = (cfg.dec_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    xkv = (cfg.dec_layers, batch, cfg.n_kv_heads, enc_len, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(kv, dtype),
+            "v": jax.ShapeDtypeStruct(kv, dtype),
+            "xk": jax.ShapeDtypeStruct(xkv, dtype),
+            "xv": jax.ShapeDtypeStruct(xkv, dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, enc_len: int = 4096):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_len, dtype, enc_len))
+
+
+def prefill(params, frames, tokens, cfg: ModelConfig, max_len: int,
+            impl: str = "chunked"):
+    """Encode + run decoder prompt; caches self-KV and cross-KV."""
+    enc_out = encode(params, frames, cfg, impl)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+
+    def layer(x, lp):
+        h, (k, v) = L.attention(lp["self"],
+                                L.apply_norm(lp["ln1"], x, cfg), cfg,
+                                positions=positions, impl=impl, causal=True)
+        x = x + h
+        ek, ev = L.project_kv(lp["cross"], enc_out, cfg)
+        h, _ = L.attention(lp["cross"], L.apply_norm(lp["ln_x"], x, cfg),
+                           cfg, positions=None, impl=impl, causal=False,
+                           kv_override=(ek, ev))
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        pad = max_len - s
+        return x, {"k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                   "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                   "xk": ek, "xv": ev}
+
+    x, cache = jax.lax.scan(layer, x, params["dec"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return (L.logits(params["embed"], x[:, -1:], cfg), cache,
+            jnp.full((b,), s, jnp.int32))
+
+
+def decode_step(params, token, cache, position, cfg: ModelConfig):
+    x = L.embed(params["embed"], token)
+    b = token.shape[0]
+    enc_len = cache["xk"].shape[3]
+
+    def layer(x, lpc):
+        lp, ck, cv, xk, xv = lpc
+        h, nk, nv = L.decode_attention_step(
+            lp["self"], L.apply_norm(lp["ln1"], x, cfg), cfg, ck, cv,
+            position)
+        x = x + h
+        from ..kernels import ops as kops
+        q_in = L.apply_norm(lp["ln_x"], x, cfg)
+        q, _, _ = L._project_qkv(lp["cross"], q_in, cfg, None)
+        lens = jnp.full((b,), enc_len, jnp.int32)
+        h = kops.decode_mha(q, xk, xv, lens, impl="ref")
+        h = h.transpose(0, 2, 1, 3).reshape(b, 1, -1).astype(x.dtype) \
+            @ lp["cross"]["wo"]
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        return x, {"k": nk, "v": nv}
+
+    x, new_kv = jax.lax.scan(
+        layer, x, (params["dec"], cache["k"], cache["v"],
+                   cache["xk"], cache["xv"]))
+    new_cache = dict(cache, k=new_kv["k"], v=new_kv["v"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits(params["embed"], x, cfg), new_cache, position + 1

@@ -1,0 +1,378 @@
+"""Shared transformer building blocks: norms, RoPE, GQA attention (train /
+prefill / decode), gated MLPs, embeddings. Pure functions over param dicts.
+
+Attention implementations:
+  * "naive"   — full S×S scores (tiny smoke tests only);
+  * "chunked" — flash-style lax.scan over KV blocks (dry-run default:
+                O(S·B) memory at 32k/500k);
+  * "pallas"  — kernels/flash_attention (TPU target; interpret on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops as kops
+from .params import P
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps=1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(F32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def norm_spec(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": P((d,), (None,), cfg.param_dtype, "ones"),
+                "b": P((d,), (None,), cfg.param_dtype, "zeros")}
+    return {"w": P((d,), (None,), cfg.param_dtype, "ones")}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x [B, H, S, D]; positions [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    ang = positions[:, None, :, None].astype(F32) * freqs  # [B,1,S,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.param_dtype
+    s = {
+        "wq": P((d, hq * hd), ("embed", "q_heads"), dt),
+        "wk": P((d, hkv * hd), ("embed", "kv_heads"), dt),
+        "wv": P((d, hkv * hd), ("embed", "kv_heads"), dt),
+        "wo": P((hq * hd, d), ("q_heads", "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        s.update({"bq": P((hq * hd,), ("q_heads",), dt, "zeros"),
+                  "bk": P((hkv * hd,), ("kv_heads",), dt, "zeros"),
+                  "bv": P((hkv * hd,), ("kv_heads",), dt, "zeros")})
+    if cfg.qk_norm:
+        s.update({"qn": P((hd,), (None,), dt, "ones"),
+                  "kn": P((hd,), (None,), dt, "ones")})
+    return s
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, use_rope=True):
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn"])
+        k = rms_norm(k, p["kn"])
+    if use_rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def project_kv(p, x, cfg: ModelConfig):
+    """K/V-only projection (cross-attention memory), no RoPE."""
+    b, s, _ = x.shape
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["kn"])
+    return k, v
+
+
+def attention(p, x, cfg: ModelConfig, positions=None, impl="chunked",
+              causal=True, window: int = 0, kv_override=None):
+    """Self (or cross, via kv_override=(k, v)) attention over full sequences
+    (train/prefill). Returns (out [B,S,D_model], (k, v) for caching)."""
+    from ..distributed import sharding as _sh
+    b, s, _ = x.shape
+    # Beyond-paper §Perf: when n_heads does not divide the model axis (qwen2:
+    # 14 heads, starcoder2: 36 heads vs 16-way TP), XLA replicates attention
+    # across the model axis ("involuntary full rematerialization"). Reshard
+    # the batch over (data x model) for the attention body instead: every
+    # chip computes a disjoint batch slice with all heads local. Only when
+    # the batch actually divides the full mesh (train_4k yes; prefill_32k's
+    # batch 32 < 256 chips no — there the grouped path is the right one).
+    full_mesh = (_sh.act_mesh_axis("pod") * _sh.act_mesh_axis("data")
+                 * _sh.act_mesh_axis("model"))
+    reshard = (cfg.n_heads % max(_sh.act_mesh_axis("model"), 1) != 0
+               and kv_override is None
+               and full_mesh > 1 and b % full_mesh == 0)
+    if reshard:
+        x = _sh.act_hint(x, ("pod", "data", "model"), None, None)
+        if positions is not None:
+            positions = _sh.act_hint(positions, ("pod", "data", "model"),
+                                     None)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    if window and s > window and impl != "naive":
+        out = _windowed_attention(q, k, v, window)
+    elif impl == "naive":
+        out = kops.mha(q, k, v, causal=causal, impl="ref")
+        if window and s > window:
+            out = _windowed_attention(q, k, v, window)
+    else:
+        # under the batch-over-model reshard every head is local: the flat
+        # (heads-in-batch) layout shards better than grouped heads
+        out = kops.mha(q, k, v, causal=causal, impl=impl, flat=reshard)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1).astype(x.dtype)
+    out = out @ p["wo"]
+    if reshard:
+        out = _sh.act_hint(out, ("pod", "data"), None, None)
+    return out, (k, v)
+
+
+def _windowed_attention(q, k, v, window: int):
+    """Banded causal attention: each query block attends to its own and the
+    previous KV block (block = window), masked to the exact window — O(S·W)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    blk = window
+    nb = s // blk
+    scale = 1.0 / (d ** 0.5)
+    qb = q.reshape(b, hq, nb, blk, d)
+    kb = k.reshape(b, hq, nb, blk, d)
+    vb = v.reshape(b, hq, nb, blk, d)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]), kb[:, :, :-1]], 2)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]), vb[:, :, :-1]], 2)
+    k2 = jnp.concatenate([kprev, kb], 3)            # [b,h,nb,2W,d]
+    v2 = jnp.concatenate([vprev, vb], 3)
+    sc = jnp.einsum("bhnqd,bhnkd->bhnqk", qb.astype(F32),
+                    k2.astype(F32)) * scale
+    qi = jnp.arange(blk)[:, None] + blk             # global offset in 2W frame
+    ki = jnp.arange(2 * blk)[None, :]
+    ok = (ki <= qi) & (ki > qi - window)
+    first = jnp.arange(nb) == 0                     # no prev block for blk 0
+    ok_first = ok & (ki >= blk)
+    mask = jnp.where(first[:, None, None], ok_first[None], ok[None])
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhnqk,bhnkd->bhnqd", pr, v2.astype(F32))
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def decode_attention_step(p, x, cfg: ModelConfig, cache_k, cache_v,
+                          position, impl="chunked", window: int = 0):
+    """One-token decode. x [B, 1, D]; cache [B, Hkv, S, hd]; position [B].
+    Returns (out, new_cache_k, new_cache_v)."""
+    b = x.shape[0]
+    pos2d = position[:, None]
+    q, k, v = _project_qkv(p, x, cfg, pos2d)
+    s_cache = cache_k.shape[2]
+    write_pos = position % s_cache if window else position
+    ck = _cache_write(cache_k, k, write_pos)
+    cv = _cache_write(cache_v, v, write_pos)
+    lengths = jnp.minimum(position + 1,
+                          s_cache if not window else window)
+    out = kops.decode_mha(q, ck, cv, lengths, impl="ref")
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1).astype(x.dtype)
+    return out @ p["wo"], ck, cv
+
+
+def _cache_write(cache, kv, position):
+    """cache [B, H, S, d]; kv [B, H, 1, d]; position [B]."""
+    def one(c, knew, p):
+        return jax.lax.dynamic_update_slice(c, knew, (0, p, 0))
+    return jax.vmap(one)(cache, kv, position)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {"wg": P((d, f), ("embed", "ff"), dt),
+                "wu": P((d, f), ("embed", "ff"), dt),
+                "wd": P((f, d), ("ff", "embed"), dt)}
+    return {"wu": P((d, f), ("embed", "ff"), dt),
+            "wd": P((f, d), ("ff", "embed"), dt)}
+
+
+def mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu((x @ p["wg"]).astype(F32)) * (x @ p["wu"]).astype(F32)
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu((x @ p["wg"]).astype(F32)) * (x @ p["wu"]).astype(F32)
+    else:
+        h = jax.nn.gelu((x @ p["wu"]).astype(F32))
+    return h.astype(x.dtype) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings & logits
+# ---------------------------------------------------------------------------
+
+def embed_spec(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    vp = cfg.vocab_padded
+    s = {"tok": P((vp, cfg.d_model), ("vocab", "embed"), dt)}
+    if not cfg.tie_embeddings:
+        s["unembed"] = P((cfg.d_model, vp), ("embed", "vocab"), dt)
+    return s
+
+
+def embed(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def logits(p, x, cfg: ModelConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    lg = (x @ w.astype(x.dtype)).astype(F32)
+    if cfg.vocab_padded > cfg.vocab:
+        # mask the padding classes out of softmax/argmax
+        idx = jnp.arange(cfg.vocab_padded)
+        lg = lg + jnp.where(idx < cfg.vocab, 0.0, -1e30)
+    return lg
+
+
+def xent_loss(lg, labels, mask=None):
+    lp = jax.nn.log_softmax(lg, axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -ll.mean()
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+# ---------------------------------------------------------------------------
+# fused vocab-chunked cross-entropy (beyond-paper §Perf optimization)
+# ---------------------------------------------------------------------------
+#
+# The naive path materializes [B, S, V] logits in f32 (plus log_softmax and
+# its gradient) — at V=152k..256k this is the peak-memory term of every
+# train_4k cell. The fused path never materializes full logits: forward scans
+# sequence chunks computing only (lse, picked-label logit); backward
+# recomputes each chunk's softmax and contracts it immediately into dx / dW.
+# Peak extra memory: one [B, C, V] chunk instead of [B, S, V].
+
+_XENT_CHUNK = 256
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def fused_xent(x, w, labels, pad_mask, chunk: int = _XENT_CHUNK):
+    loss, _ = _fused_xent_fwd_impl(x, w, labels, pad_mask, chunk)
+    return loss
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    return chunk
+
+
+def _fused_xent_fwd_impl(x, w, labels, pad_mask, chunk):
+    b, s, d = x.shape
+    chunk = _pick_chunk(s, chunk)
+    nb = s // chunk
+
+    def step(acc, jb):
+        xc = jax.lax.dynamic_slice_in_dim(x, jb * chunk, chunk, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, jb * chunk, chunk, 1)
+        lg = (xc @ w.astype(xc.dtype)).astype(F32) + pad_mask
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - picked), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), jnp.arange(nb))
+    return total / (b * s), None
+
+
+def _fused_xent_fwd(x, w, labels, pad_mask, chunk):
+    loss, _ = _fused_xent_fwd_impl(x, w, labels, pad_mask, chunk)
+    return loss, (x, w, labels, pad_mask)
+
+
+def _fused_xent_bwd(chunk, res, g):
+    x, w, labels, pad_mask = res
+    b, s, d = x.shape
+    v = w.shape[1]
+    chunk = _pick_chunk(s, chunk)
+    nb = s // chunk
+    scale = g / (b * s)
+
+    def step(dw, jb):
+        xc = jax.lax.dynamic_slice_in_dim(x, jb * chunk, chunk, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, jb * chunk, chunk, 1)
+        lg = (xc @ w.astype(xc.dtype)).astype(F32) + pad_mask
+        p = jax.nn.softmax(lg, axis=-1)
+        p = p - jax.nn.one_hot(lc, v, dtype=F32)
+        dxc = jnp.einsum("bcv,dv->bcd", p, w.astype(F32)) * scale
+        dw = dw + jnp.einsum("bcd,bcv->dv", xc.astype(F32), p) * scale
+        return dw, dxc.astype(x.dtype)
+
+    dw0 = jnp.zeros((d, v), F32)
+    dw, dxs = jax.lax.scan(step, dw0, jnp.arange(nb))
+    dx = dxs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return dx, dw.astype(w.dtype), None, None
+
+
+fused_xent.defvjp(_fused_xent_fwd, _fused_xent_bwd)
+
+
+def fused_xent_loss(embed_params, x, tokens, cfg: ModelConfig):
+    """Next-token loss from final hidden states without materializing full
+    logits. ``x`` [B, S, D] post-final-norm; ``tokens`` [B, S]."""
+    w = embed_params["tok"].T if cfg.tie_embeddings \
+        else embed_params["unembed"]
+    vp = cfg.vocab_padded
+    if vp > cfg.vocab:
+        pad_mask = jnp.where(jnp.arange(vp) < cfg.vocab, 0.0, -1e30)
+    else:
+        pad_mask = jnp.zeros((vp,), F32)
+    return fused_xent(x[:, :-1], w, tokens[:, 1:], pad_mask)

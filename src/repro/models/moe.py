@@ -1,0 +1,194 @@
+"""Mixture-of-Experts transformer (olmoe-1b-7b, dbrx-132b).
+
+The FF block routes tokens to top-k experts. Two dispatch paths:
+
+* ``revet``  — the paper's technique (DESIGN.md §2): tokens-as-threads are
+  *compacted* per expert (filter), run through replicate regions (experts),
+  and merge back weighted; positions-within-expert come from one cumsum (the
+  hoisted allocator's pointer stream, §V-B(b)); capacity overflow = threads
+  stalling on an empty free list. Memory O(A·D) — the production path.
+* ``dense``  — MapReduce-style one-hot einsum dispatch [T, E, C] (what
+  Spatial could express). O(T·E·C) memory; baseline for the comparison
+  benchmark only.
+
+Expert weights carry the "experts" logical axis -> expert parallelism over
+the model mesh axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .params import P, stack
+
+F32 = jnp.float32
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cfg.param_dtype
+    # expert weights shard 2-D when configured: experts over the model axis
+    # (EP) and each expert's ff dim over the data axes (§Perf: dbrx-132b is
+    # 16.5GB/device under EP alone; the extra axis brings weights+optimizer
+    # under HBM; for small experts like olmoe it only adds traffic)
+    ff_ax = "expert_ff" if cfg.moe_2d_sharding else None
+    return {
+        "router": P((d, e), ("embed", None), dt),
+        "wg": P((e, d, f), ("experts", "embed", ff_ax), dt),
+        "wu": P((e, d, f), ("experts", "embed", ff_ax), dt),
+        "wd": P((e, f, d), ("experts", ff_ax, "embed"), dt),
+    }
+
+
+def layer_spec(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": L.attn_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+        "moe": moe_spec(cfg),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embed_spec(cfg),
+        "layers": stack(layer_spec(cfg), cfg.n_layers),
+        "ln_f": L.norm_spec(cfg),
+    }
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to 8 (sublane alignment)
+
+
+def moe_ff(p, x, cfg: ModelConfig, path: str = "revet"):
+    """x [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    toks = x.reshape(b * s, d)
+    logits = (toks @ p["router"]).astype(F32)
+    gates, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    cap = capacity(cfg, b * s)
+
+    def expert_fn(dispatched):           # [E, C, D]
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatched,
+                                   p["wg"]).astype(F32))
+        h = h * jnp.einsum("ecd,edf->ecf", dispatched, p["wu"]).astype(F32)
+        return jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), p["wd"])
+
+    from ..kernels import ops as kops
+    if path == "dense":
+        out = kops.moe_dense_einsum(toks, gates, eidx, cfg.n_experts, cap,
+                                    expert_fn)
+    else:
+        out = kops.moe_dispatch_combine(toks, gates, eidx, cfg.n_experts,
+                                        cap, expert_fn, impl="scatter")
+    return out.reshape(b, s, d), (logits, eidx)
+
+
+def aux_load_balance_loss(logits, eidx, cfg: ModelConfig) -> jax.Array:
+    """Switch-style auxiliary loss: E * Σ_e f_e · p_e."""
+    probs = jax.nn.softmax(logits, -1)
+    pe = probs.mean(0)
+    fe = jnp.zeros(cfg.n_experts, F32).at[eidx.reshape(-1)].add(1.0)
+    fe = fe / jnp.maximum(fe.sum(), 1)
+    return cfg.n_experts * jnp.sum(fe * pe)
+
+
+def _layer_fwd(cfg: ModelConfig, impl: str, path: str, x, lp, positions):
+    h, _ = L.attention(lp["attn"], L.apply_norm(lp["ln1"], x, cfg), cfg,
+                       positions=positions, impl=impl)
+    x = x + h
+    h, (lg, ei) = moe_ff(lp["moe"], L.apply_norm(lp["ln2"], x, cfg), cfg,
+                         path=path)
+    return x + h, aux_load_balance_loss(lg, ei, cfg)
+
+
+def trunk(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+          remat: bool = True, path: str = "revet", positions=None):
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+    f = functools.partial(_layer_fwd, cfg, impl, path)
+    if remat:
+        f = jax.checkpoint(f)
+
+    def scan_body(carry, lp):
+        x, aux = carry
+        x, a = f(x, lp, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.float32(0.0)),
+                               params["layers"])
+    return L.apply_norm(params["ln_f"], x, cfg), aux / cfg.n_layers
+
+
+def forward(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+            remat: bool = True, path: str = "revet", positions=None):
+    x, aux = trunk(params, tokens, cfg, impl, remat, path, positions)
+    return L.logits(params["embed"], x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, impl: str = "chunked",
+            path: str = "revet", aux_weight: float = 0.01,
+            fused: bool = True):
+    if fused:
+        x, aux = trunk(params, batch["tokens"], cfg, impl=impl, path=path)
+        return L.fused_xent_loss(params["embed"], x, batch["tokens"], cfg) \
+            + aux_weight * aux
+    lg, aux = forward(params, batch["tokens"], cfg, impl=impl, path=path)
+    return L.xent_loss(lg[:, :-1], batch["tokens"][:, 1:]) + aux_weight * aux
+
+
+# -- serving (same cache structure as dense) -------------------------------------
+
+from .transformer import abstract_cache, init_cache  # noqa: E402,F401
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            impl: str = "chunked", path: str = "revet"):
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+
+    def scan_body(x, lp):
+        h, (k, v) = L.attention(lp["attn"],
+                                L.apply_norm(lp["ln1"], x, cfg), cfg,
+                                positions=positions, impl=impl)
+        x = x + h
+        h, _ = moe_ff(lp["moe"], L.apply_norm(lp["ln2"], x, cfg), cfg, path)
+        x = x + h
+        pad = max_len - s
+        return x, {"k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                   "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))}
+
+    x, cache = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return (L.logits(params["embed"], x[:, -1:], cfg), cache,
+            jnp.full((b,), s, jnp.int32))
+
+
+def decode_step(params, token, cache, position, cfg: ModelConfig,
+                path: str = "revet"):
+    x = L.embed(params["embed"], token)
+
+    def scan_body(x, lpc):
+        lp, ck, cv = lpc
+        h, nk, nv = L.decode_attention_step(
+            lp["attn"], L.apply_norm(lp["ln1"], x, cfg), cfg, ck, cv,
+            position)
+        x = x + h
+        h, _ = moe_ff(lp["moe"], L.apply_norm(lp["ln2"], x, cfg), cfg, path)
+        x = x + h
+        return x, {"k": nk, "v": nv}
+
+    x, new_cache = jax.lax.scan(scan_body, x,
+                                (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits(params["embed"], x, cfg), new_cache, position + 1

@@ -1,0 +1,81 @@
+"""Parameter specs: shapes + logical sharding axes, abstract or concrete.
+
+Every model in the zoo declares its parameters as a pytree of ``P`` specs.
+From one spec tree we derive:
+* ``abstract(spec)``  — ShapeDtypeStruct tree (dry-run: no allocation);
+* ``init(spec, rng)`` — concrete initialization (smoke tests / examples);
+* ``pspec_tree(spec, rules)`` — PartitionSpec tree for pjit in/out shardings.
+
+Logical axes (mapped to mesh axes by ``distributed/sharding.py``):
+  vocab, embed, q_heads, kv_heads, ff, experts, inner, state, conv, layers
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class P:
+    """One parameter: shape + per-dim logical axis names (None = replicated)."""
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"         # normal | zeros | ones
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack(spec, n: int, axis_name: Optional[str] = "layers"):
+    """Prepend a stacking dim (scan-over-layers) to every leaf."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.dtype, p.init),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract(spec):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype)),
+        spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def init(spec, seed: int = 0):
+    """Concrete init. Deterministic per-leaf seeding (path-hashed) keeps
+    this independent of traversal order."""
+    leaves, treedef = jax.tree.flatten(
+        spec, is_leaf=lambda x: isinstance(x, P))
+    out = []
+    for i, p in enumerate(leaves):
+        rng = np.random.default_rng(seed * 1_000_003 + i)
+        if p.init == "zeros":
+            a = np.zeros(p.shape, np.float32)
+        elif p.init == "ones":
+            a = np.ones(p.shape, np.float32)
+        else:
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            a = rng.standard_normal(p.shape).astype(np.float32) \
+                / np.sqrt(max(fan_in, 1))
+        out.append(jnp.asarray(a, jnp.dtype(p.dtype)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def n_params(spec) -> int:
+    leaves = jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, P))
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def pspec_tree(spec, rules: dict[str, Optional[str]]):
+    """Logical axes -> jax.sharding.PartitionSpec via ``rules``
+    (divisibility-aware filtering happens in distributed/sharding.py)."""
+    from jax.sharding import PartitionSpec
+
+    def one(p: P) -> PartitionSpec:
+        return PartitionSpec(*(rules.get(a) if a else None for a in p.axes))
+
+    return jax.tree.map(one, spec, is_leaf=lambda x: isinstance(x, P))

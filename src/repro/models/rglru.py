@@ -1,0 +1,280 @@
+"""RecurrentGemma / Griffin hybrid (recurrentgemma-9b): repeating groups of
+(attn_every-1) recurrent blocks + 1 local-attention block, each followed by a
+gated MLP. MQA (kv=1), window-limited attention -> sub-quadratic, so this
+arch runs the long_500k cell.
+
+Recurrent block:  y = Wo( GeLU(W1·x) ⊙ RGLRU(conv1d(W2·x)) )
+RG-LRU:           a = exp(-c·softplus(Λ)·sigmoid(Wa·u));
+                  h = a ⊙ h + sqrt(1-a²) ⊙ (sigmoid(Wi·u) ⊙ u)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops as kops
+from . import layers as L
+from .params import P, stack
+
+F32 = jnp.float32
+_C = 8.0   # RG-LRU decay constant (paper value)
+
+
+def rec_block_spec(cfg: ModelConfig) -> dict:
+    d, w, k = cfg.d_model, cfg.rnn_width, cfg.d_conv
+    dt = cfg.param_dtype
+    return {
+        "ln": L.norm_spec(cfg),
+        "w1": P((d, w), ("embed", "inner"), dt),
+        "w2": P((d, w), ("embed", "inner"), dt),
+        "conv_w": P((k, w), (None, "inner"), dt),
+        "conv_b": P((w,), ("inner",), dt, "zeros"),
+        "wa": P((w, w), ("inner", None), dt),
+        "wi": P((w, w), ("inner", None), dt),
+        "lam": P((w,), ("inner",), "float32", "ones"),
+        "wo": P((w, d), ("inner", "embed"), dt),
+        "ln_mlp": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def attn_block_spec(cfg: ModelConfig) -> dict:
+    return {
+        "ln": L.norm_spec(cfg),
+        "attn": L.attn_spec(cfg),
+        "ln_mlp": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    n_rec_per_group = cfg.attn_every - 1
+    n_groups = cfg.n_layers // cfg.attn_every
+    n_tail = cfg.n_layers - n_groups * cfg.attn_every   # trailing recurrents
+    spec = {
+        "embed": L.embed_spec(cfg),
+        "groups": stack({
+            "rec": stack(rec_block_spec(cfg), n_rec_per_group, "sublayers"),
+            "attn": attn_block_spec(cfg),
+        }, n_groups),
+        "ln_f": L.norm_spec(cfg),
+    }
+    if n_tail:
+        spec["tail"] = stack(rec_block_spec(cfg), n_tail)
+    return spec
+
+
+def _rglru_gates(p, u):
+    """u [B, S, W] -> (a, b) for h = a·h + b  (precomputed gate form)."""
+    uf = u.astype(F32)
+    r = jax.nn.sigmoid(uf @ p["wa"].astype(F32))
+    i = jax.nn.sigmoid(uf @ p["wi"].astype(F32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2 * log_a), 1e-8)) * (i * uf)
+    return a, b
+
+
+def _rec_block(p, x, cfg: ModelConfig, h0=None, conv0=None, impl="assoc"):
+    """Returns (x_out, (hT, conv_tail))."""
+    b, s, _ = x.shape
+    hn = L.apply_norm(p["ln"], x, cfg)
+    gate = jax.nn.gelu((hn @ p["w1"]).astype(F32))
+    u = hn @ p["w2"]
+    conv_tail = u[:, -(cfg.d_conv - 1):, :]
+    from .ssm import _conv1d
+    if conv0 is not None:
+        up = jnp.concatenate([conv0, u], axis=1)
+        u = _conv1d(up, p["conv_w"], p["conv_b"])[:, cfg.d_conv - 1:]
+    else:
+        u = _conv1d(u, p["conv_w"], p["conv_b"])
+    a, bb = _rglru_gates(p, u)
+    h0 = h0 if h0 is not None else jnp.zeros((b, cfg.rnn_width), F32)
+    if impl == "pallas":
+        y, hT = kops.rg_lru_scan(a.astype(F32), bb, h0, impl="pallas")
+    elif impl == "naive":
+        y, hT = kops.rg_lru_assoc(a.astype(F32), bb, h0)
+    else:
+        y, hT = kops.rg_lru_chunked(a.astype(F32), bb, h0)
+    y = (gate * y.astype(F32)).astype(x.dtype)
+    x = x + y @ p["wo"]
+    x = x + L.mlp(p["mlp"], L.apply_norm(p["ln_mlp"], x, cfg), cfg)
+    return x, (hT, conv_tail)
+
+
+def _attn_block(p, x, cfg: ModelConfig, positions, impl):
+    h, kv = L.attention(p["attn"], L.apply_norm(p["ln"], x, cfg), cfg,
+                        positions=positions, impl=impl, window=cfg.window)
+    x = x + h
+    x = x + L.mlp(p["mlp"], L.apply_norm(p["ln_mlp"], x, cfg), cfg)
+    return x, kv
+
+
+def trunk(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+          remat: bool = True, positions=None):
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+
+    def group_fwd(x, gp):
+        def rec_scan(x, rp):
+            x, _ = _rec_block(rp, x, cfg)
+            return x, None
+        x, _ = jax.lax.scan(rec_scan, x, gp["rec"])
+        x, _ = _attn_block(gp["attn"], x, cfg, positions, impl)
+        return x
+
+    gf = jax.checkpoint(group_fwd) if remat else group_fwd
+    x, _ = jax.lax.scan(lambda x, gp: (gf(x, gp), None), x, params["groups"])
+    if "tail" in params:
+        def rec_scan(x, rp):
+            x, _ = _rec_block(rp, x, cfg)
+            return x, None
+        x, _ = jax.lax.scan(rec_scan, x, params["tail"])
+    return L.apply_norm(params["ln_f"], x, cfg)
+
+
+def forward(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+            remat: bool = True, positions=None):
+    x = trunk(params, tokens, cfg, impl, remat, positions)
+    return L.logits(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, impl: str = "chunked",
+            fused: bool = True):
+    if fused:
+        x = trunk(params, batch["tokens"], cfg, impl=impl)
+        return L.fused_xent_loss(params["embed"], x, batch["tokens"], cfg)
+    lg = forward(params, batch["tokens"], cfg, impl=impl)
+    return L.xent_loss(lg[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- serving --------------------------------------------------------------------
+
+def _counts(cfg: ModelConfig):
+    n_rec_pg = cfg.attn_every - 1
+    n_groups = cfg.n_layers // cfg.attn_every
+    n_tail = cfg.n_layers - n_groups * cfg.attn_every
+    return n_rec_pg, n_groups, n_tail
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    n_rec_pg, n_groups, n_tail = _counts(cfg)
+    w = min(cfg.window, max_len)
+    cache = {
+        "rec_h": jax.ShapeDtypeStruct(
+            (n_groups, n_rec_pg, batch, cfg.rnn_width), F32),
+        "rec_conv": jax.ShapeDtypeStruct(
+            (n_groups, n_rec_pg, batch, cfg.d_conv - 1, cfg.rnn_width),
+            dtype),
+        "attn_k": jax.ShapeDtypeStruct(
+            (n_groups, batch, cfg.n_kv_heads, w, cfg.hd), dtype),
+        "attn_v": jax.ShapeDtypeStruct(
+            (n_groups, batch, cfg.n_kv_heads, w, cfg.hd), dtype),
+    }
+    if n_tail:
+        cache["tail_h"] = jax.ShapeDtypeStruct(
+            (n_tail, batch, cfg.rnn_width), F32)
+        cache["tail_conv"] = jax.ShapeDtypeStruct(
+            (n_tail, batch, cfg.d_conv - 1, cfg.rnn_width), dtype)
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_len, dtype))
+
+
+def decode_step(params, token, cache, position, cfg: ModelConfig):
+    x = L.embed(params["embed"], token)
+    n_rec_pg, n_groups, n_tail = _counts(cfg)
+    w = cache["attn_k"].shape[3]
+
+    def rec_step(p, x, h_st, conv_st):
+        hn = L.apply_norm(p["ln"], x, cfg)
+        gate = jax.nn.gelu((hn @ p["w1"]).astype(F32))       # [B,1,W]
+        u = hn @ p["w2"]                                      # [B,1,W]
+        win = jnp.concatenate([conv_st, u], axis=1)           # [B,K,W]
+        uc = (win * p["conv_w"][None]).sum(1) + p["conv_b"]   # [B,W]
+        a, bb = _rglru_gates(p, uc[:, None, :])
+        h_new = a[:, 0] * h_st + bb[:, 0]
+        y = (gate[:, 0] * h_new).astype(x.dtype)
+        x = x + (y @ p["wo"])[:, None, :]
+        x = x + L.mlp(p["mlp"], L.apply_norm(p["ln_mlp"], x, cfg), cfg)
+        return x, h_new, win[:, 1:]
+
+    def group_step(x, gpc):
+        gp, h_st, conv_st, ck, cv = gpc
+
+        def rec_scan(x, rpc):
+            rp, h, cs = rpc
+            x, hn, csn = rec_step(rp, x, h, cs)
+            return x, (hn, csn)
+
+        x, (h_new, conv_new) = jax.lax.scan(
+            rec_scan, x, (gp["rec"], h_st, conv_st))
+        ap = gp["attn"]
+        h, nk, nv = L.decode_attention_step(
+            ap["attn"], L.apply_norm(ap["ln"], x, cfg), cfg, ck, cv,
+            position, window=w)
+        x = x + h
+        x = x + L.mlp(ap["mlp"], L.apply_norm(ap["ln_mlp"], x, cfg), cfg)
+        return x, (h_new, conv_new, nk, nv)
+
+    x, (rh, rc, nk, nv) = jax.lax.scan(
+        group_step, x, (params["groups"], cache["rec_h"], cache["rec_conv"],
+                        cache["attn_k"], cache["attn_v"]))
+    new_cache = dict(cache, rec_h=rh, rec_conv=rc, attn_k=nk, attn_v=nv)
+    if n_tail:
+        def tail_scan(x, rpc):
+            rp, h, cs = rpc
+            x, hn, csn = rec_step(rp, x, h, cs)
+            return x, (hn, csn)
+        x, (th, tc) = jax.lax.scan(
+            tail_scan, x, (params["tail"], cache["tail_h"],
+                           cache["tail_conv"]))
+        new_cache.update(tail_h=th, tail_conv=tc)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits(params["embed"], x, cfg), new_cache, position + 1
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            impl: str = "chunked"):
+    """Prompt pass collecting recurrent states and windowed KV."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+    w = min(cfg.window, max_len)
+
+    def group_fwd(x, gp):
+        def rec_scan(x, rp):
+            x, (hT, ct) = _rec_block(rp, x, cfg)
+            return x, (hT, ct)
+        x, (hT, ct) = jax.lax.scan(rec_scan, x, gp["rec"])
+        x, (k, v) = _attn_block(gp["attn"], x, cfg, positions, impl)
+        # keep the trailing window of KV (ring-buffer layout, aligned so that
+        # slot (pos % w) holds position pos — decode continues seamlessly)
+        kw, vw = k[:, :, -w:], v[:, :, -w:]
+        if s >= w:
+            shift = s % w
+            kw = jnp.roll(kw, shift, axis=2)
+            vw = jnp.roll(vw, shift, axis=2)
+        return x, (hT, ct, kw, vw)
+
+    x, (rh, rc, ks, vs) = jax.lax.scan(group_fwd, x, params["groups"])
+    cache = {"rec_h": rh, "rec_conv": rc, "attn_k": ks, "attn_v": vs}
+    if "tail" in params:
+        def rec_scan(x, rp):
+            x, (hT, ct) = _rec_block(rp, x, cfg)
+            return x, (hT, ct)
+        x, (th, tc) = jax.lax.scan(rec_scan, x, params["tail"])
+        cache.update(tail_h=th, tail_conv=tc)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return (L.logits(params["embed"], x[:, -1:], cfg), cache,
+            jnp.full((b,), s, jnp.int32))

@@ -1,0 +1,202 @@
+"""Mamba-1 SSM stack (falcon-mamba-7b): attention-free; constant-size state
+makes it a long_500k cell (sub-quadratic, DESIGN.md §Arch-applicability).
+
+Block: in_proj -> (x, z); causal depthwise conv1d(k) + silu; x_proj ->
+(dt, B, C); selective scan (kernels/ssm_scan or the associative-scan jnp
+formulation); gate by silu(z); out_proj.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops as kops
+from . import layers as L
+from .params import P, stack
+
+F32 = jnp.float32
+
+
+def block_spec(cfg: ModelConfig) -> dict:
+    d, di, n, r, k = (cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dt_rank,
+                      cfg.d_conv)
+    dt = cfg.param_dtype
+    return {
+        "ln": L.norm_spec(cfg),
+        "in_proj": P((d, 2 * di), ("embed", "inner"), dt),
+        "conv_w": P((k, di), (None, "inner"), dt),
+        "conv_b": P((di,), ("inner",), dt, "zeros"),
+        "x_proj": P((di, r + 2 * n), ("inner", None), dt),
+        "dt_proj": P((r, di), (None, "inner"), dt),
+        "dt_bias": P((di,), ("inner",), dt, "zeros"),
+        "a_log": P((di, n), ("inner", None), "float32", "zeros"),
+        "d_skip": P((di,), ("inner",), "float32", "ones"),
+        "out_proj": P((di, d), ("inner", "embed"), dt),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embed_spec(cfg),
+        "layers": stack(block_spec(cfg), cfg.n_layers),
+        "ln_f": L.norm_spec(cfg),
+    }
+
+
+def _conv1d(x, w, b):
+    """Causal depthwise conv. x [B, S, Di]; w [K, Di]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _block(p, x, cfg: ModelConfig, impl: str):
+    """x [B, S, D] -> [B, S, D]."""
+    b, s, _ = x.shape
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.dt_rank
+    h = L.apply_norm(p["ln"], x, cfg)
+    xz = h @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = jax.nn.silu(_conv1d(xi, p["conv_w"], p["conv_b"]).astype(F32)) \
+        .astype(x.dtype)
+    proj = xi @ p["x_proj"]
+    dt = jax.nn.softplus((proj[..., :r] @ p["dt_proj"]
+                          + p["dt_bias"]).astype(F32))
+    bmat = proj[..., r: r + n].astype(F32)
+    cmat = proj[..., r + n:].astype(F32)
+    a = -jnp.exp(p["a_log"])
+    h0 = jnp.zeros((b, di, n), F32)
+    if impl == "pallas":
+        y, _ = kops.ssm(xi.astype(F32), dt, a, bmat, cmat, p["d_skip"], h0,
+                        impl="pallas")
+    elif impl == "naive":
+        y, _ = kops.ssm_assoc(xi.astype(F32), dt, a, bmat, cmat,
+                              p["d_skip"], h0)
+    else:
+        y, _ = kops.ssm_chunked(xi.astype(F32), dt, a, bmat, cmat,
+                                p["d_skip"], h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    return x + y @ p["out_proj"]
+
+
+def trunk(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+          remat: bool = True):
+    x = L.embed(params["embed"], tokens)
+
+    def block(xx, pp):
+        return _block(pp, xx, cfg=cfg, impl=impl)
+
+    f = jax.checkpoint(block) if remat else block
+
+    def scan_body(x, lp):
+        return f(x, lp), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    return L.apply_norm(params["ln_f"], x, cfg)
+
+
+def forward(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+            remat: bool = True, positions=None):
+    x = trunk(params, tokens, cfg, impl, remat)
+    return L.logits(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, impl: str = "chunked",
+            fused: bool = True):
+    if fused:
+        x = trunk(params, batch["tokens"], cfg, impl=impl)
+        return L.fused_xent_loss(params["embed"], x, batch["tokens"], cfg)
+    lg = forward(params, batch["tokens"], cfg, impl=impl)
+    return L.xent_loss(lg[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- serving: constant-size recurrent state ------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    del max_len  # state size is sequence-independent (the whole point)
+    return {
+        "h": jnp.zeros((cfg.n_layers, batch, cfg.d_inner, cfg.d_state), F32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1,
+                           cfg.d_inner), dtype),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    return {
+        "h": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.d_inner, cfg.d_state), F32),
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            impl: str = "assoc"):
+    """Prompt pass carrying out per-layer final states."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.dt_rank
+
+    def scan_body(x, p):
+        h = L.apply_norm(p["ln"], x, cfg)
+        xz = h @ p["in_proj"]
+        xi, z = xz[..., :di], xz[..., di:]
+        conv_tail = xi[:, -(cfg.d_conv - 1):, :]
+        xi = jax.nn.silu(_conv1d(xi, p["conv_w"], p["conv_b"]).astype(F32)) \
+            .astype(x.dtype)
+        proj = xi @ p["x_proj"]
+        dt = jax.nn.softplus((proj[..., :r] @ p["dt_proj"]
+                              + p["dt_bias"]).astype(F32))
+        bmat = proj[..., r: r + n].astype(F32)
+        cmat = proj[..., r + n:].astype(F32)
+        a = -jnp.exp(p["a_log"])
+        h0 = jnp.zeros((b, di, n), F32)
+        y, hT = kops.ssm_chunked(xi.astype(F32), dt, a, bmat, cmat,
+                                 p["d_skip"], h0)
+        y = y.astype(x.dtype) * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+        return x + y @ p["out_proj"], {"h": hT, "conv": conv_tail}
+
+    x, cache = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return (L.logits(params["embed"], x[:, -1:], cfg), cache,
+            jnp.full((b,), s, jnp.int32))
+
+
+def decode_step(params, token, cache, position, cfg: ModelConfig):
+    """Single-step recurrence: O(1) in sequence length."""
+    x = L.embed(params["embed"], token)           # [B, 1, D]
+    di, n, r = cfg.d_inner, cfg.d_state, cfg.dt_rank
+
+    def scan_body(x, lpc):
+        p, h_st, conv_st = lpc                    # h [B,Di,N]; conv [B,K-1,Di]
+        hn = L.apply_norm(p["ln"], x, cfg)
+        xz = hn @ p["in_proj"]
+        xi, z = xz[..., :di], xz[..., di:]        # [B,1,Di]
+        window = jnp.concatenate([conv_st, xi], axis=1)   # [B,K,Di]
+        conv = (window * p["conv_w"][None]).sum(1) + p["conv_b"]
+        xi1 = jax.nn.silu(conv.astype(F32)).astype(x.dtype)  # [B,Di]
+        proj = xi1 @ p["x_proj"]
+        dt = jax.nn.softplus((proj[..., :r] @ p["dt_proj"]
+                              + p["dt_bias"]).astype(F32))   # [B,Di]
+        bmat = proj[..., r: r + n].astype(F32)    # [B,N]
+        cmat = proj[..., r + n:].astype(F32)
+        a = -jnp.exp(p["a_log"])                  # [Di,N]
+        da = jnp.exp(dt[..., None] * a[None])     # [B,Di,N]
+        h_new = da * h_st + (dt * xi1.astype(F32))[..., None] \
+            * bmat[:, None, :]
+        y = (h_new * cmat[:, None, :]).sum(-1) + p["d_skip"] * \
+            xi1.astype(F32)                        # [B,Di]
+        y = (y.astype(x.dtype) *
+             jax.nn.silu(z[:, 0].astype(F32)).astype(x.dtype))
+        out = x + (y @ p["out_proj"])[:, None, :]
+        return out, {"h": h_new, "conv": window[:, 1:]}
+
+    x, new_cache = jax.lax.scan(scan_body, x,
+                                (params["layers"], cache["h"], cache["conv"]))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits(params["embed"], x, cfg), new_cache, position + 1

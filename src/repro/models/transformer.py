@@ -1,0 +1,202 @@
+"""Decoder-only dense transformer (starcoder2 / phi3 / qwen3 / qwen2 and the
+LM half of internvl2). Layers are stacked and scanned (small HLO at 64
+layers, dry-run-friendly); remat is applied per layer for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from .params import P, stack
+
+
+def layer_spec(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": L.attn_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embed_spec(cfg),
+        "layers": stack(layer_spec(cfg), cfg.n_layers),
+        "ln_f": L.norm_spec(cfg),
+    }
+
+
+def _layer_fwd(cfg: ModelConfig, impl: str, x, lp, positions):
+    h, _ = L.attention(lp["attn"], L.apply_norm(lp["ln1"], x, cfg), cfg,
+                       positions=positions, impl=impl)
+    x = x + h
+    x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+    return x
+
+
+def trunk(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+          remat: bool = True, positions=None):
+    """tokens [B, S] -> final hidden states [B, S, D]."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+    f = functools.partial(_layer_fwd, cfg, impl)
+    if remat:
+        f = jax.checkpoint(f, static_argnums=())
+
+    def scan_body(x, lp):
+        return f(x, lp, positions), None
+
+    x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    return L.apply_norm(params["ln_f"], x, cfg)
+
+
+def forward(params, tokens, cfg: ModelConfig, impl: str = "chunked",
+            remat: bool = True, positions=None):
+    """tokens [B, S] -> logits [B, S, V] (training / prefill trunk)."""
+    x = trunk(params, tokens, cfg, impl, remat, positions)
+    return L.logits(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, impl: str = "chunked",
+            fused: bool = True):
+    if fused:
+        x = trunk(params, batch["tokens"], cfg, impl=impl)
+        return L.fused_xent_loss(params["embed"], x, batch["tokens"], cfg)
+    lg = forward(params, batch["tokens"], cfg, impl=impl)
+    return L.xent_loss(lg[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- serving ------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            impl: str = "chunked"):
+    """Run the trunk over a prompt, returning (logits_last, cache, position)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = L.embed(params["embed"], tokens)
+    ks, vs = [], []
+
+    def scan_body(x, lp):
+        h, (k, v) = L.attention(lp["attn"],
+                                L.apply_norm(lp["ln1"], x, cfg), cfg,
+                                positions=positions, impl=impl)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        pad = max_len - s
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x, {"k": k, "v": v}
+
+    x, cache = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    lg = L.logits(params["embed"], x[:, -1:], cfg)
+    return lg, cache, jnp.full((b,), s, jnp.int32)
+
+
+def decode_step(params, token, cache, position, cfg: ModelConfig):
+    """One token for the whole batch. token [B, 1]; position [B]."""
+    x = L.embed(params["embed"], token)
+
+    def scan_body(x, lpc):
+        lp, ck, cv = lpc
+        h, nk, nv = L.decode_attention_step(
+            lp["attn"], L.apply_norm(lp["ln1"], x, cfg), cfg, ck, cv,
+            position)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        return x, {"k": nk, "v": nv}
+
+    x, new_cache = jax.lax.scan(scan_body, x,
+                                (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    lg = L.logits(params["embed"], x, cfg)
+    return lg, new_cache, position + 1
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (beyond-paper §Perf: decode cells are KV-streaming-bound;
+# int8 + per-vector scales halve the dominant memory term)
+# ---------------------------------------------------------------------------
+
+def abstract_cache_q8(cfg: ModelConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len, cfg.hd)
+    sshape = (cfg.n_layers, batch, cfg.n_kv_heads, max_len)
+    return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+            "ks": jax.ShapeDtypeStruct(sshape, jnp.bfloat16),
+            "vs": jax.ShapeDtypeStruct(sshape, jnp.bfloat16)}
+
+
+def init_cache_q8(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        abstract_cache_q8(cfg, batch, max_len))
+
+
+def _quantize_vec(x):
+    """x [..., hd] -> (int8 [..., hd], scale [...])  per-vector absmax."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_step_q8(params, token, cache, position, cfg: ModelConfig):
+    """One-token decode against the quantized cache. Dequantization fuses
+    into the attention contraction (HBM reads stay int8)."""
+    x = L.embed(params["embed"], token)
+
+    def scan_body(x, lpc):
+        lp, kq, vq, ks, vs = lpc
+        h_in = L.apply_norm(lp["ln1"], x, cfg)
+        q, k, v = L._project_qkv(lp["attn"], h_in, cfg, position[:, None])
+        # write: quantize the new position's K/V vector
+        knew, ksnew = _quantize_vec(k)             # [B,H,1,hd], [B,H,1]
+        vnew, vsnew = _quantize_vec(v)
+        kq = L._cache_write(kq, knew, position)
+        vq = L._cache_write(vq, vnew, position)
+        ks = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(
+            c, n, (0, p)))(ks, ksnew, position)
+        vs = jax.vmap(lambda c, n, p: jax.lax.dynamic_update_slice(
+            c, n, (0, p)))(vs, vsnew, position)
+        # read: dequantize lazily inside the attention einsums
+        from ..kernels import ops as kops
+        b = x.shape[0]
+        hq, hkv = cfg.n_heads, cfg.n_kv_heads
+        g = hq // hkv
+        qg = q.reshape(b, hkv, g, 1, cfg.hd)
+        kd = kq.astype(jnp.bfloat16) * ks[..., None].astype(jnp.bfloat16)
+        vd = vq.astype(jnp.bfloat16) * vs[..., None].astype(jnp.bfloat16)
+        lengths = jnp.minimum(position + 1, kq.shape[2])
+        out = kops._grouped_ref(qg, kd, vd, causal=False, lengths=lengths)
+        out = out.reshape(b, hq, 1, cfg.hd).transpose(0, 2, 1, 3) \
+            .reshape(b, 1, -1).astype(x.dtype)
+        x = x + out @ lp["attn"]["wo"]
+        x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        return x, {"k": kq, "v": vq, "ks": ks, "vs": vs}
+
+    x, new_cache = jax.lax.scan(
+        scan_body, x, (params["layers"], cache["k"], cache["v"],
+                       cache["ks"], cache["vs"]))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits(params["embed"], x, cfg), new_cache, position + 1

@@ -1,0 +1,103 @@
+"""VLM backbone (internvl2-1b): the InternViT frontend is a STUB per the
+assignment — ``input_specs()`` provides precomputed patch embeddings
+[B, n_patches, vit_width]; an MLP projector maps them into the LM, and the
+qwen2-style decoder attends over [patches ; text] causally (text loss only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers as L
+from . import transformer as T
+from .params import P
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    spec = T.model_spec(cfg)
+    spec["projector"] = {
+        "w1": P((cfg.vit_width, cfg.d_model), (None, "embed"),
+                cfg.param_dtype),
+        "w2": P((cfg.d_model, cfg.d_model), ("embed", "embed2"),
+                cfg.param_dtype),
+    }
+    return spec
+
+
+def _prefix(params, patch_embeds, tokens):
+    proj = jax.nn.gelu(
+        (patch_embeds.astype(params["projector"]["w1"].dtype)
+         @ params["projector"]["w1"]).astype(jnp.float32)).astype(
+        params["projector"]["w1"].dtype) @ params["projector"]["w2"]
+    x_txt = L.embed(params["embed"], tokens)
+    return jnp.concatenate([proj, x_txt], axis=1)
+
+
+def trunk(params, patch_embeds, tokens, cfg: ModelConfig,
+          impl: str = "chunked", remat: bool = True):
+    """-> final hidden states of the TEXT positions [B, S, D]."""
+    b, s = tokens.shape
+    npatch = patch_embeds.shape[1]
+    x = _prefix(params, patch_embeds, tokens)
+    total = npatch + s
+    positions = jnp.broadcast_to(jnp.arange(total)[None], (b, total))
+    import functools
+    f = functools.partial(T._layer_fwd, cfg, impl)
+    if remat:
+        f = jax.checkpoint(f)
+    x, _ = jax.lax.scan(lambda x, lp: (f(x, lp, positions), None), x,
+                        params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return x[:, npatch:]
+
+
+def forward(params, patch_embeds, tokens, cfg: ModelConfig,
+            impl: str = "chunked", remat: bool = True):
+    """patch_embeds [B, P, vit_width]; tokens [B, S] -> text logits."""
+    x = trunk(params, patch_embeds, tokens, cfg, impl, remat)
+    return L.logits(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, impl: str = "chunked",
+            fused: bool = True):
+    if fused:
+        x = trunk(params, batch["patch_embeds"], batch["tokens"], cfg,
+                  impl=impl)
+        return L.fused_xent_loss(params["embed"], x, batch["tokens"], cfg)
+    lg = forward(params, batch["patch_embeds"], batch["tokens"], cfg,
+                 impl=impl)
+    return L.xent_loss(lg[:, :-1], batch["tokens"][:, 1:])
+
+
+# -- serving: cache covers [patches ; text] ------------------------------------
+
+abstract_cache = T.abstract_cache
+init_cache = T.init_cache
+
+
+def prefill(params, patch_embeds, tokens, cfg: ModelConfig, max_len: int,
+            impl: str = "chunked"):
+    b, s = tokens.shape
+    npatch = patch_embeds.shape[1]
+    x = _prefix(params, patch_embeds, tokens)
+    total = npatch + s
+    positions = jnp.broadcast_to(jnp.arange(total)[None], (b, total))
+
+    def scan_body(x, lp):
+        h, (k, v) = L.attention(lp["attn"],
+                                L.apply_norm(lp["ln1"], x, cfg), cfg,
+                                positions=positions, impl=impl)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        pad = max_len - total
+        return x, {"k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                   "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))}
+
+    x, cache = jax.lax.scan(scan_body, x, params["layers"])
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return (L.logits(params["embed"], x[:, -1:], cfg), cache,
+            jnp.full((b,), total, jnp.int32))
+
+
+decode_step = T.decode_step

@@ -1,0 +1,119 @@
+"""Model zoo: one uniform interface over all 10 assigned architectures.
+
+    zoo = get_model(cfg)
+    zoo.spec()                      # parameter spec tree (P leaves)
+    zoo.loss_fn(params, batch)     # training loss
+    zoo.input_specs(shape)         # ShapeDtypeStructs for the dry-run
+    zoo.prefill / zoo.decode_step / zoo.abstract_cache / zoo.init_cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, moe, rglru, ssm, transformer, vlm
+from .params import abstract, init, n_params
+
+_ENC_LEN_CAP = 4096   # encoder length for enc-dec cells (DESIGN.md)
+
+
+@dataclasses.dataclass
+class Zoo:
+    cfg: ModelConfig
+    mod: object
+
+    # -- parameters ---------------------------------------------------------
+    def spec(self):
+        return self.mod.model_spec(self.cfg)
+
+    def abstract_params(self):
+        return abstract(self.spec())
+
+    def init_params(self, seed: int = 0):
+        return init(self.spec(), seed)
+
+    def n_params(self) -> int:
+        return n_params(self.spec())
+
+    # -- training ---------------------------------------------------------------
+    def loss_fn(self, params, batch, impl: str = "chunked"):
+        return self.mod.loss_fn(params, batch, self.cfg, impl=impl)
+
+    def batch_specs(self, shape: ShapeConfig) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if self.cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, min(s, _ENC_LEN_CAP), encdec.FRAME_DIM), jnp.float32)
+        if self.cfg.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, self.cfg.n_patches, self.cfg.vit_width), jnp.bfloat16)
+        return specs
+
+    def make_batch(self, shape: ShapeConfig, seed: int = 0) -> dict:
+        import numpy as np
+        rng = np.random.default_rng(seed)
+        out = {}
+        for k, sd in self.batch_specs(shape).items():
+            if sd.dtype == jnp.int32:
+                out[k] = jnp.asarray(
+                    rng.integers(0, self.cfg.vocab, sd.shape), jnp.int32)
+            else:
+                out[k] = jnp.asarray(rng.standard_normal(sd.shape), sd.dtype)
+        return out
+
+    # -- serving -----------------------------------------------------------------
+    def _cache_len(self, max_len: int) -> int:
+        # VLM caches cover [patches ; text]
+        if self.cfg.family == "vlm":
+            return max_len + self.cfg.n_patches
+        return max_len
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return self.mod.abstract_cache(self.cfg, batch,
+                                       self._cache_len(max_len))
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.mod.init_cache(self.cfg, batch, self._cache_len(max_len))
+
+    def decode_step(self, params, token, cache, position):
+        return self.mod.decode_step(params, token, cache, position, self.cfg)
+
+    def prefill(self, params, batch, max_len: int, impl: str = "chunked"):
+        if self.cfg.family == "encdec":
+            return self.mod.prefill(params, batch["frames"],
+                                    batch["tokens"], self.cfg, max_len,
+                                    impl=impl)
+        if self.cfg.family == "vlm":
+            return self.mod.prefill(params, batch["patch_embeds"],
+                                    batch["tokens"], self.cfg,
+                                    self._cache_len(max_len), impl=impl)
+        return self.mod.prefill(params, batch["tokens"], self.cfg, max_len,
+                                impl=impl)
+
+    def decode_input_specs(self, shape: ShapeConfig) -> dict:
+        """ShapeDtypeStructs for one serve_step at this cell."""
+        b, s = shape.global_batch, shape.seq_len
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "cache": self.abstract_cache(b, s),
+            "position": jax.ShapeDtypeStruct((b,), jnp.int32),
+        }
+
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "encdec": encdec,
+    "ssm": ssm,
+    "hybrid": rglru,
+    "vlm": vlm,
+}
+
+
+def get_model(cfg: ModelConfig) -> Zoo:
+    return Zoo(cfg, _FAMILIES[cfg.family])

@@ -1,0 +1,58 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick for 1000+ node scale).
+
+int8 quantization with error feedback: each step, the residual from the
+previous step's quantization is added back before quantizing, so the scheme
+is unbiased over time (EF-SGD). The compressed representation (int8 payload +
+f32 scale) is what would transit the pod-interconnect — a 4× reduction in
+gradient bytes on the slowest links; the decompress happens after the
+all-reduce. The train loop enables this with ``--grad-compression int8``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+
+
+def compress(g, err):
+    """Returns ((q_int8, scale), new_error)."""
+    gf = g.astype(F32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(F32) * scale
+    return (q, scale), gf - deq
+
+
+def decompress(q, scale):
+    return q.astype(F32) * scale
+
+
+def compress_tree(grads, err_state):
+    qs, new_err = [], []
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    for g, e in zip(flat_g, flat_e):
+        (q, s), ne = compress(g, e)
+        qs.append((q, s))
+        new_err.append(ne)
+    return jax.tree.unflatten(tdef, [q for q in qs]), \
+        jax.tree.unflatten(tdef, new_err)
+
+
+def roundtrip_tree(grads, err_state):
+    """compress+decompress in one jit (what the wire would carry); returns
+    (dequantized grads, new error state)."""
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    outs, errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        (q, s), ne = compress(g, e)
+        outs.append(decompress(q, s).astype(g.dtype))
+        errs.append(ne)
+    return jax.tree.unflatten(tdef, outs), jax.tree.unflatten(tdef, errs)

@@ -1,0 +1,137 @@
+"""Continuous-batching decode engine — the paper's forward-backward merge
+(§III-B(d)) running an LLM serving loop (DESIGN.md §2).
+
+The decode loop is a circulating while-loop over request *threads*:
+
+* **forward branch** — queued requests are admitted into free batch slots
+  (the merge takes from the forward link whenever a lane is free);
+* **backedge** — active slots recirculate every step with one new token;
+* **exit filter** — slots whose thread hits EOS / max-tokens are filtered
+  out, and their KV slot (the hoisted allocator's buffer, §V-B(b)) returns
+  to the free list, which is what admits the next request — the same
+  allocator feedback loop as Fig. 14's load balancing.
+
+Slot state is dense (lane-compacted): the batch dimension is always fully
+occupied by live threads + explicitly-masked free lanes, never by divergent
+finished threads — the dataflow-threads claim, applied to serving.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.zoo import Zoo
+
+EOS = 0
+
+# per-cache-leaf batch axis (mirrors sharding._CACHE_LAYOUT)
+_BATCH_AXIS = {"k": 1, "v": 1, "xk": 1, "xv": 1, "attn_k": 1, "attn_v": 1,
+               "h": 1, "conv": 1, "rec_h": 2, "rec_conv": 2,
+               "tail_h": 1, "tail_conv": 1}
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int = 32
+    tokens: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, zoo: Zoo, params, batch_slots: int, max_len: int,
+                 impl: str = "naive"):
+        self.zoo = zoo
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.impl = impl
+        self.cache = zoo.init_cache(batch_slots, max_len)
+        self.position = jnp.zeros((batch_slots,), jnp.int32)
+        self.last_tok = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.slot_req: list[Optional[Request]] = [None] * batch_slots
+        self.free = collections.deque(range(batch_slots))   # allocator queue
+        self.queue: collections.deque[Request] = collections.deque()
+        self.steps = 0
+        self.occupancy: list[int] = []
+        # one jitted circulation for the whole engine lifetime
+        self._decode = jax.jit(
+            lambda p, t, c, pos: zoo.decode_step(p, t, c, pos))
+
+    # -- forward link ---------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Forward merge: move queued requests into free lanes (prefill the
+        prompt at batch=1 and splice its cache into the slot)."""
+        while self.queue and self.free:
+            slot = self.free.popleft()
+            req = self.queue.popleft()
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            lg, cache1, pos1 = self.zoo.prefill(
+                self.params, {"tokens": toks}, self.max_len, impl=self.impl)
+            self.cache = _splice_cache(self.cache, cache1, slot)
+            first = jnp.argmax(lg[:, -1], -1).astype(jnp.int32)
+            self.last_tok = self.last_tok.at[slot, 0].set(first[0])
+            self.position = self.position.at[slot].set(pos1[0])
+            req.tokens.append(int(first[0]))
+            self.slot_req[slot] = req
+
+    # -- one circulation --------------------------------------------------------
+    def step(self) -> None:
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        self.occupancy.append(len(active))
+        if not active:
+            return
+        lg, self.cache, self.position = self._decode(
+            self.params, self.last_tok, self.cache, self.position)
+        nxt = jnp.argmax(lg[:, 0], -1).astype(jnp.int32)
+        self.last_tok = nxt[:, None]
+        nxt_np = np.asarray(nxt)
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(nxt_np[i])
+            req.tokens.append(tok)
+            # exit filter: EOS or budget exhausted -> free the lane
+            if tok == EOS or len(req.tokens) >= req.max_new \
+                    or int(self.position[i]) >= self.max_len - 1:
+                req.done = True
+                self.slot_req[i] = None
+                self.free.append(i)          # allocator feedback (Fig. 14)
+        self.steps += 1
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        seen: set[int] = set()
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return finished
+
+    def stats(self) -> dict:
+        occ = self.occupancy or [0]
+        return {"steps": self.steps,
+                "mean_occupancy": float(np.mean(occ)),
+                "peak_occupancy": int(np.max(occ))}
+
+
+def _splice_cache(batch_cache, single_cache, slot: int):
+    """Insert a prefilled batch=1 cache into lane ``slot``."""
+    out = {}
+    for k, v in batch_cache.items():
+        ax = _BATCH_AXIS[k]
+        src = single_cache[k].astype(v.dtype)
+        idx = [slice(None)] * v.ndim
+        idx[ax] = slice(slot, slot + 1)
+        out[k] = jax.lax.dynamic_update_slice_in_dim(v, src, slot, axis=ax)
+    return out

@@ -1,0 +1,54 @@
+"""Application correctness: golden, TokenVM and VectorVM all must match the
+host-side reference implementation for every Table III app."""
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core.compiler import CompileOptions, compile_program
+from repro.core.golden import Golden
+from repro.core.token_vm import TokenVM
+from repro.core.vector_vm import VectorVM
+
+
+def check(app, got: dict):
+    for name, want in app.expected.items():
+        got_arr = np.asarray(got[name])[: len(want)]
+        np.testing.assert_array_equal(
+            got_arr, want, err_msg=f"{app.name}: dram '{name}' mismatch")
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_app_golden(name):
+    app = ALL_APPS[name]()
+    g = Golden(app.prog.ir, app.dram_init)
+    check(app, g.run(**app.params))
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_app_token_vm(name):
+    app = ALL_APPS[name]()
+    res = compile_program(app.prog)
+    vm = TokenVM(res.dfg, app.dram_init)
+    check(app, vm.run(**app.params))
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_app_vector_vm(name):
+    app = ALL_APPS[name]()
+    res = compile_program(app.prog)
+    vm = VectorVM(res.dfg, app.dram_init)
+    check(app, vm.run(**app.params))
+    assert 0 < vm.lane_occupancy() <= 1.0
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_app_all_optimizations_off(name):
+    """Fig. 12 ablation sanity: disabling every optimization pass must not
+    change results (only resources)."""
+    app = ALL_APPS[name]()
+    opts = CompileOptions(if_to_select=False, fuse_allocations=False,
+                          hoist_allocators=False, subword_packing=False,
+                          eliminate_hierarchy=False)
+    res = compile_program(app.prog, opts)
+    vm = TokenVM(res.dfg, app.dram_init)
+    check(app, vm.run(**app.params))

@@ -1,0 +1,409 @@
+"""End-to-end: language -> passes -> dataflow lowering -> TokenVM, validated
+against the golden interpreter (paper §III/§V semantics preservation)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compiler import CompileOptions, compile_program, run_passes
+from repro.core.golden import Golden
+from repro.core.lang import Prog, c, select
+from repro.core.token_vm import TokenVM
+
+
+def run_both(p: Prog, dram_init=None, opts=None, **params):
+    """Run golden (pre-pass IR), TokenVM and VectorVM (compiled dataflow);
+    compare all DRAM arrays pairwise and return (golden arrays, TokenVM)."""
+    from repro.core.vector_vm import VectorVM
+
+    g = Golden(p.ir, dram_init)
+    want = {k: v.copy() for k, v in g.run(**params).items()}
+    res = compile_program(p, opts)
+    vm = TokenVM(res.dfg, dram_init)
+    got = vm.run(**params)
+    vvm = VectorVM(res.dfg, dram_init)
+    vgot = vvm.run(**params)
+    for name in want:
+        if name.startswith("__"):
+            continue
+        np.testing.assert_array_equal(
+            got[name], want[name],
+            err_msg=f"dram '{name}' mismatch (TokenVM vs golden)")
+        np.testing.assert_array_equal(
+            vgot[name], want[name],
+            err_msg=f"dram '{name}' mismatch (VectorVM vs golden)")
+    return want, vm
+
+
+# ---------------------------------------------------------------------------
+# straight-line + if
+# ---------------------------------------------------------------------------
+
+def test_straightline_arith():
+    p = Prog()
+    p.dram("out", 4)
+    with p.main("x") as (m, x):
+        y = m.let(x * 3 + 1)
+        m.dram_store("out", 0, y)
+        m.dram_store("out", 1, y >> 1)
+        m.dram_store("out", 2, (y ^ 0xFF) & 0x7F)
+        m.dram_store("out", 3, select(y > 10, 111, 222))
+    run_both(p, x=7)
+
+
+def test_if_else_dataflow():
+    p = Prog()
+    p.dram("vals", 8)
+    p.dram("out", 8)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            v = b.let(b.dram_load("vals", i))
+            r = b.let(0)
+            with b.if_else(v % 2 == 0) as (t, e):
+                t.set(r, v * 10)
+                e.set(r, v + 1000)
+            b.dram_store("out", i, r)
+    vals = [3, 8, 1, 4, 4, 9, 0, 7]
+    run_both(p, {"vals": np.array(vals)}, n=8)
+
+
+def test_if_with_exit_keeps_barriers_flowing():
+    p = Prog()
+    p.dram("out", 8)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            with b.if_(i % 2 == 0) as t:
+                t.exit_()
+            b.dram_store("out", i, i * i)
+    run_both(p, n=8)
+
+
+# ---------------------------------------------------------------------------
+# while loops (fwd-bwd merge protocol)
+# ---------------------------------------------------------------------------
+
+def test_while_collatz_dataflow():
+    p = Prog()
+    p.dram("vals", 8)
+    p.dram("steps", 8)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            v = b.let(b.dram_load("vals", i))
+            s = b.let(0)
+            with b.while_(v != 1) as w:
+                with w.if_else((v & 1) == 0) as (even, odd):
+                    even.set(v, v >> 1)
+                    odd.set(v, v * 3 + 1)
+                w.set(s, s + 1)
+            b.dram_store("steps", i, s)
+    vals = [1, 2, 3, 7, 27, 6, 19, 97]
+    run_both(p, {"vals": np.array(vals)}, n=8)
+
+
+def test_nested_while():
+    """Nested data-dependent loops — the case that breaks Aurochs's timeout
+    mechanism (§II) and motivates the barrier protocol (§III-B(d))."""
+    p = Prog()
+    p.dram("out", 6)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            total = b.let(0)
+            outer = b.let(i + 1)
+            with b.while_(outer > 0) as w1:
+                inner = w1.let(outer)
+                with w1.while_(inner > 0) as w2:
+                    w2.set(total, total + 1)
+                    w2.set(inner, inner - 1)
+                w1.set(outer, outer - 1)
+            b.dram_store("out", i, total)
+    want, _ = run_both(p, n=6)
+    # triangle numbers: sum_{k=1..i+1} k
+    assert list(want["out"]) == [sum(range(1, i + 2)) for i in range(6)]
+
+
+def test_while_zero_trip_group():
+    """Threads whose while never runs (composability of empty waves)."""
+    p = Prog()
+    p.dram("vals", 5)
+    p.dram("out", 5)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            v = b.let(b.dram_load("vals", i))
+            with b.while_(v > 0) as w:
+                w.set(v, v - 1)
+            b.dram_store("out", i, v + 100)
+    run_both(p, {"vals": np.array([0, 0, 0, 0, 0])}, n=5)
+
+
+# ---------------------------------------------------------------------------
+# foreach nesting, reductions, empty groups
+# ---------------------------------------------------------------------------
+
+def test_nested_foreach_reduction():
+    p = Prog()
+    p.dram("out", 4)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            with b.foreach(i + 1, reduce=("add", 0)) as (inner, j):
+                inner.yield_(j * j)
+            b.dram_store("out", i, inner.result)
+    want, _ = run_both(p, n=4)
+    assert list(want["out"]) == [sum(j * j for j in range(i + 1))
+                                 for i in range(4)]
+
+
+def test_foreach_zero_trip_empty_group():
+    """Data-dependent zero-trip foreach: [[]] vs [] distinction end-to-end
+    (§III-A(b) — reductions must yield init for empty groups)."""
+    p = Prog()
+    p.dram("counts", 5)
+    p.dram("out", 5)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            k = b.let(b.dram_load("counts", i))
+            with b.foreach(k, reduce=("add", 0)) as (inner, j):
+                inner.yield_(1)
+            b.dram_store("out", i, inner.result + 50)
+    counts = [3, 0, 2, 0, 0]
+    want, _ = run_both(p, {"counts": np.array(counts)}, n=5)
+    assert list(want["out"]) == [ci + 50 for ci in counts]
+
+
+def test_reduction_min_max():
+    p = Prog()
+    p.dram("vals", 8)
+    p.dram("out", 2)
+    with p.main("n") as (m, n):
+        with m.foreach(n, reduce=("min", 1 << 30)) as (b, i):
+            b.yield_(b.dram_load("vals", i))
+        m.dram_store("out", 0, b.result)
+        with m.foreach(n, reduce=("max", -(1 << 30))) as (b2, i2):
+            b2.yield_(b2.dram_load("vals", i2))
+        m.dram_store("out", 1, b2.result)
+    vals = [5, -3, 99, 0, 12, -44, 7, 2]
+    want, _ = run_both(p, {"vals": np.array(vals)}, n=8)
+    assert list(want["out"]) == [min(vals), max(vals)]
+
+
+# ---------------------------------------------------------------------------
+# scratchpad + atomics + fork
+# ---------------------------------------------------------------------------
+
+def test_sram_per_thread_buffers():
+    p = Prog()
+    p.dram("out", 6)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            buf = b.sram(8)
+            with b.foreach(8) as (w, j):
+                w.sram_store(buf, j, i * 10 + j)
+            acc = b.let(0)
+            with b.foreach(8) as (r, j2):
+                pass  # reads below at thread level to exercise ordering
+            with b.foreach(8, reduce=("add", 0)) as (r2, j3):
+                r2.yield_(r2.sram_load(buf, j3))
+            b.dram_store("out", i, r2.result)
+    want, vm = run_both(p, n=6)
+    assert list(want["out"]) == [sum(i * 10 + j for j in range(8))
+                                 for i in range(6)]
+    # free-list discipline: all buffers returned
+    for pool, fl in vm.free_lists.items():
+        assert len(fl) == vm.g.pools[pool].n_bufs, f"leak in pool {pool}"
+
+
+def test_fork_with_atomics_tail():
+    p = Prog()
+    p.dram("counter", 1)
+    p.dram("fan", 6)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            f = b.let(b.dram_load("fan", i))
+            with b.fork(f) as (fb, j):
+                fb.atomic_add("counter", 0, j + 1)
+    fan = [2, 0, 3, 1, 0, 4]
+    want, _ = run_both(p, {"fan": np.array(fan)}, n=6)
+    assert want["counter"][0] == sum(sum(range(1, f + 1)) for f in fan)
+
+
+def test_fork_in_while_tail_kdtree_shape():
+    """fork at a while-body tail: children re-enter the loop (the kD-tree
+    traversal shape, §VI-B(c)). Binary-tree node counting via dynamic forks."""
+    p = Prog()
+    p.dram("count", 1)
+    depth_limit = 4
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            d = b.let(0)
+            live = b.let(1)
+            with b.while_(live == 1) as w:
+                w.atomic_add("count", 0, 1)
+                with w.if_(d >= depth_limit) as t:
+                    t.exit_()
+                w.set(d, d + 1)
+                with w.fork(2) as (fb, j):
+                    pass  # children inherit d, continue the loop
+    want, _ = run_both(p, n=2)
+    # each root expands into a complete binary tree of depth_limit+1 levels
+    assert want["count"][0] == 2 * (2 ** (depth_limit + 1) - 1)
+
+
+# ---------------------------------------------------------------------------
+# replicate
+# ---------------------------------------------------------------------------
+
+def test_replicate_partitions_work():
+    p = Prog()
+    p.dram("vals", 16)
+    p.dram("out", 16)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            v = b.let(b.dram_load("vals", i))
+            with b.replicate(4) as r:
+                w = r.let(v * 2 + 1)
+                r.dram_store("out", i, w)
+    vals = list(range(16))
+    want, vm = run_both(p, {"vals": np.array(vals)}, n=16)
+    assert list(want["out"]) == [v * 2 + 1 for v in vals]
+
+
+def test_replicate_with_sram_hoisting():
+    """Replicate region containing one allocation: passes.hoist_allocators
+    steers by pointer bits; results must be identical either way."""
+    p = Prog()
+    p.dram("vals", 12)
+    p.dram("out", 12)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            v = b.let(b.dram_load("vals", i))
+            with b.replicate(2) as r:
+                buf = r.sram(4)
+                r.sram_store(buf, 0, v * v)
+                got = r.sram_load(buf, 0)
+                r.dram_store("out", i, got)
+    vals = list(range(12))
+    for hoist in (False, True):
+        opts = CompileOptions(hoist_allocators=hoist)
+        want, _ = run_both(p, {"vals": np.array(vals)}, opts=opts, n=12)
+        assert list(want["out"]) == [v * v for v in vals]
+
+
+# ---------------------------------------------------------------------------
+# views & iterators through the full pipeline
+# ---------------------------------------------------------------------------
+
+def test_views_through_dataflow():
+    p = Prog()
+    p.dram("src", 64)
+    p.dram("dst", 64)
+    with p.main("nt") as (m, nt):
+        with m.foreach(nt) as (b, t):
+            rv = b.read_view("src", t * 16, 16)
+            wv = b.write_view("dst", t * 16, 16)
+            with b.foreach(16) as (inner, j):
+                x = inner.view_load(rv, j)
+                inner.view_store(wv, j, x * 2 + 1)
+    src = np.arange(64)
+    want, _ = run_both(p, {"src": src}, nt=4)
+    np.testing.assert_array_equal(want["dst"], src * 2 + 1)
+
+
+def test_read_iterator_demand_fetch():
+    """ReadIt refill-at-deref (Fig. 5 demand-fetched path) with small tiles to
+    force multiple refills."""
+    p = Prog()
+    p.dram("input", 64, "i8")
+    p.dram("offsets", 4)
+    p.dram("lengths", 4)
+    with p.main("count") as (m, count):
+        with m.foreach(count) as (b, idx):
+            off = b.let(b.dram_load("offsets", idx))
+            ln = b.let(0)
+            it = b.read_it("input", off, tile=4)
+            with b.while_(lambda h: h.deref(it) != 0) as w:
+                w.set(ln, ln + 1)
+                w.advance(it)
+            b.dram_store("lengths", idx, ln)
+    strings = [b"hello", b"", b"revetrevet", b"xyzzy" * 3 + b"abc"]
+    blob, offs = bytearray(), []
+    for s in strings:
+        offs.append(len(blob))
+        blob += s + b"\0"
+    want, _ = run_both(
+        p, {"input": np.frombuffer(bytes(blob), np.uint8),
+            "offsets": np.array(offs)}, count=4)
+    assert list(want["lengths"]) == [len(s) for s in strings]
+
+
+def test_write_iterator_tile_flush():
+    p = Prog()
+    p.dram("out", 40)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            wit = b.write_it("out", i * 10, tile=4)
+            with b.foreach(7) as (inner, j):
+                pass
+            # sequential writes (7 of them -> one full tile flush + epilogue)
+            k = b.let(0)
+            with b.while_(k < 7) as w:
+                w.it_write(wit, i * 100 + k)
+                w.set(k, k + 1)
+    want, _ = run_both(p, n=3)
+    for i in range(3):
+        assert list(want["out"][i * 10: i * 10 + 7]) == \
+            [i * 100 + k for k in range(7)]
+
+
+def test_hierarchy_elimination_equivalence():
+    """pragma(eliminate_hierarchy): foreach -> fork + atomic counting (Fig. 9)
+    must preserve semantics."""
+    p = Prog()
+    p.dram("vals", 8)
+    p.dram("out", 8)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, t):
+            with b.foreach(8, eliminate_hierarchy=True) as (inner, j):
+                x = inner.let(inner.dram_load("vals", j))
+                inner.dram_store("out", j, x * 3)
+    vals = list(range(8))
+    for elim in (False, True):
+        want, _ = run_both(p, {"vals": np.array(vals)},
+                           opts=CompileOptions(eliminate_hierarchy=elim), n=1)
+        assert list(want["out"]) == [v * 3 for v in vals]
+
+
+def test_if_to_select_equivalence():
+    p = Prog()
+    p.dram("vals", 10)
+    p.dram("out", 10)
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            v = b.let(b.dram_load("vals", i))
+            r = b.let(0)
+            with b.if_else(v > 4) as (t, e):
+                t.set(r, v * 2)
+                t.dram_store("out", i, r + 1)
+                e.set(r, v + 7)
+    vals = [1, 9, 4, 5, 0, 8, 3, 6, 2, 7]
+    for conv in (False, True):
+        want, _ = run_both(p, {"vals": np.array(vals)},
+                           opts=CompileOptions(if_to_select=conv), n=10)
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=10),
+       st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_property_random_loops(vals, divisor):
+    """Property: data-dependent while+if compiled to dataflow == golden."""
+    p = Prog()
+    p.dram("vals", len(vals))
+    p.dram("out", len(vals))
+    with p.main("n") as (m, n):
+        with m.foreach(n) as (b, i):
+            v = b.let(b.dram_load("vals", i))
+            acc = b.let(0)
+            with b.while_(v > 0) as w:
+                with w.if_else(v % divisor == 0) as (t, e):
+                    t.set(acc, acc + v)
+                    e.set(acc, acc + 1)
+                w.set(v, v - 1)
+            b.dram_store("out", i, acc)
+    run_both(p, {"vals": np.array(vals)}, n=len(vals))

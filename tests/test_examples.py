@@ -1,0 +1,37 @@
+"""Examples must keep working (they are the public API's acceptance tests)."""
+import subprocess
+import sys
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+
+def run_example(name: str, *args: str, timeout: int = 600) -> str:
+    out = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", name), *args],
+        env=ENV, capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stdout + out.stderr
+    return out.stdout
+
+
+def test_quickstart():
+    out = run_example("quickstart.py")
+    assert "OK — all three executors agree" in out
+
+
+def test_moe_dispatch_demo():
+    out = run_example("moe_dispatch_demo.py")
+    assert "OK" in out and "agrees" in out
+
+
+def test_train_lm_demo():
+    out = run_example("train_lm.py")   # default 60 steps
+    assert "OK" in out
+
+
+def test_serve_engine_demo():
+    out = run_example("serve_engine.py")
+    assert "OK" in out

@@ -1,0 +1,264 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret=True) against
+its pure-jnp/numpy oracle in ref.py, across shapes and dtypes."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import (decode_attention, flash_attention, hash_probe,
+                           moe_dispatch, rg_lru, segment_reduce,
+                           ssm_scan, stream_compact)
+
+
+# ---------------------------------------------------------------------------
+# stream_compact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d", [(256, 8), (512, 4), (1024, 16), (96, 2)])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_stream_compact_shapes(n, d, dtype):
+    rng = np.random.default_rng(n + d)
+    mask = rng.integers(0, 2, n)
+    if dtype == np.int32:
+        vals = rng.integers(-(2 ** 31), 2 ** 31 - 1, (n, d)).astype(dtype)
+    else:
+        vals = rng.standard_normal((n, d)).astype(dtype)
+    got, cnt = ops.stream_compact(mask, vals)
+    want, wcnt = ref.compact_ref(mask, vals)
+    assert int(cnt) == wcnt
+    np.testing.assert_allclose(np.asarray(got)[:wcnt], want[:wcnt],
+                               rtol=0, atol=0)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=300))
+@settings(max_examples=20, deadline=None)
+def test_stream_compact_property(bits):
+    mask = np.array(bits, np.int32)
+    vals = np.arange(len(bits) * 3, dtype=np.float32).reshape(-1, 3)
+    got, cnt = ops.stream_compact(mask, vals)
+    want, wcnt = ref.compact_ref(mask, vals)
+    assert int(cnt) == wcnt
+    np.testing.assert_array_equal(np.asarray(got)[:wcnt], want[:wcnt])
+
+
+def test_stream_compact_all_or_none():
+    vals = np.ones((256, 4), np.float32)
+    got, cnt = ops.stream_compact(np.zeros(256, np.int32), vals)
+    assert int(cnt) == 0
+    got, cnt = ops.stream_compact(np.ones(256, np.int32), vals)
+    assert int(cnt) == 256
+    np.testing.assert_array_equal(np.asarray(got), vals)
+
+
+# ---------------------------------------------------------------------------
+# segment_reduce
+# ---------------------------------------------------------------------------
+
+def random_sltf(rng, n):
+    kinds = np.zeros(n, np.int64)
+    bars = rng.random(n) < 0.25
+    kinds[bars] = rng.integers(1, 4, bars.sum())
+    vals = rng.integers(-50, 50, n).astype(np.float32)
+    return kinds, vals
+
+
+@pytest.mark.parametrize("n", [64, 256, 777])
+def test_segment_reduce_matches_oracle(n):
+    rng = np.random.default_rng(n)
+    kinds, vals = random_sltf(rng, n)
+    ok, ov, cnt, carry = ops.segment_reduce(kinds, vals, init=0.0)
+    wk, wv, wacc, wopen = ref.segment_reduce_ref(kinds, vals, 0.0)
+    assert int(cnt) == len(wk)
+    np.testing.assert_array_equal(np.asarray(ok)[: len(wk)], wk)
+    np.testing.assert_allclose(np.asarray(ov)[: len(wv)], wv, atol=1e-5)
+
+
+def test_segment_reduce_empty_group_distinctions():
+    """[[ ]] -> [0] ; [[],[]] -> [0,0] ; [] -> [] (§III-A(b)), via kernel."""
+    # [[]] = Ω1, Ω2
+    ok, ov, cnt, _ = ops.segment_reduce(np.array([1, 2]), np.zeros(2), 0.0)
+    assert int(cnt) == 2 and list(np.asarray(ok)[:2]) == [0, 1]
+    # [] = Ω2
+    ok, ov, cnt, _ = ops.segment_reduce(np.array([2]), np.zeros(1), 0.0)
+    assert int(cnt) == 1 and int(np.asarray(ok)[0]) == 1
+    # [[],[]] = Ω1, Ω1, Ω2
+    ok, ov, cnt, _ = ops.segment_reduce(np.array([1, 1, 2]), np.zeros(3), 0.0)
+    assert int(cnt) == 3 and list(np.asarray(ok)[:3]) == [0, 0, 1]
+
+
+def test_segment_reduce_carry_across_blocks():
+    """A segment spanning multiple 256-token blocks accumulates correctly."""
+    n = 600
+    kinds = np.zeros(n, np.int64)
+    kinds[-1] = 1
+    vals = np.ones(n, np.float32)
+    ok, ov, cnt, _ = ops.segment_reduce(kinds, vals, init=0.0)
+    assert int(cnt) == 1
+    assert float(np.asarray(ov)[0]) == n - 1   # all data tokens before Ω1
+
+
+# ---------------------------------------------------------------------------
+# hash_probe
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_slots,n_keys", [(128, 64), (512, 256)])
+def test_hash_probe(n_slots, n_keys):
+    rng = np.random.default_rng(7)
+    keys = rng.choice(np.arange(1, 1 << 16), n_slots // 4, replace=False)
+    vals = rng.integers(1, 1 << 16, len(keys))
+    tk = np.zeros(2 * n_slots, np.int64)
+    tv = np.zeros(2 * n_slots, np.int64)
+    for k, v in zip(keys, vals):
+        h = ref._mix_ref(int(k)) % n_slots
+        while tk[h] != 0:
+            h += 1
+        tk[h], tv[h] = k, v
+    tk[n_slots:2 * n_slots] = tk[:n_slots]
+    tv[n_slots:2 * n_slots] = tv[:n_slots]
+    queries = np.concatenate([rng.choice(keys, n_keys // 2),
+                              rng.integers(1 << 16, 1 << 17, n_keys // 2)])
+    got_v, got_f = ops.hash_lookup(queries, tk, tv, n_slots)
+    want_v, want_f = ref.hash_probe_ref(queries, tk, tv, n_slots)
+    np.testing.assert_array_equal(np.asarray(got_v), want_v)
+    np.testing.assert_array_equal(np.asarray(got_f), want_f)
+
+
+# ---------------------------------------------------------------------------
+# flash / decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,s,d", [(2, 128, 64), (1, 256, 128), (4, 128, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(bh, s, d, causal, dtype):
+    rng = np.random.default_rng(bh * s + d)
+    q = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((bh, s, d)), dtype)
+    got = flash_attention.flash_attention(q, k, v, causal=causal,
+                                          block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_chunked_attention_matches_ref():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 256, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 256, 32)), jnp.float32)
+    got = ops.chunked_attention(q, k, v, causal=True, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("bh,s,d", [(2, 256, 64), (3, 512, 32)])
+def test_decode_attention(bh, s, d):
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.standard_normal((bh, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, s, d)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, s, bh))
+    got = decode_attention.decode_attention(q, k, v, lengths, block_k=128)
+    want = ref.attention_ref(q, k, v, causal=False, lengths=lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_gqa_head_matching():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((2, 8, 64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 2, 64, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 2, 64, 32)), jnp.float32)
+    got = ops.mha(q, k, v, causal=True, impl="pallas")
+    want = ops.mha(q, k, v, causal=True, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# recurrences
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,di,n", [(1, 64, 128, 8), (2, 128, 256, 16)])
+def test_ssm_scan(b, s, di, n):
+    rng = np.random.default_rng(di)
+    x = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, di)) * 0.1 + 0.01, jnp.float32)
+    a = jnp.asarray(-rng.random((di, n)) - 0.1, jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, n)) * 0.2, jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, s, n)) * 0.2, jnp.float32)
+    d = jnp.asarray(rng.standard_normal(di), jnp.float32)
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    y, hT = ssm_scan.ssm_scan(x, dt, a, bb, cc, d, h0, chunk=32, block_d=64)
+    wy, wh = ref.ssm_scan_ref(x, dt, a, bb, cc, d, h0)
+    np.testing.assert_allclose(np.asarray(y), wy, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), wh, atol=1e-3, rtol=1e-3)
+
+
+def test_ssm_assoc_matches_sequential():
+    rng = np.random.default_rng(1)
+    b, s, di, n = 2, 32, 16, 4
+    x = jnp.asarray(rng.standard_normal((b, s, di)), jnp.float32)
+    dt = jnp.asarray(rng.random((b, s, di)) * 0.1 + 0.01, jnp.float32)
+    a = jnp.asarray(-rng.random((di, n)) - 0.1, jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, n)) * 0.2, jnp.float32)
+    cc = jnp.asarray(rng.standard_normal((b, s, n)) * 0.2, jnp.float32)
+    d = jnp.asarray(rng.standard_normal(di), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, di, n)) * 0.1, jnp.float32)
+    y, hT = ops.ssm_assoc(x, dt, a, bb, cc, d, h0)
+    wy, wh = ref.ssm_scan_ref(x, dt, a, bb, cc, d, h0)
+    np.testing.assert_allclose(np.asarray(y), wy, atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hT), wh, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,s,d", [(2, 64, 128), (1, 256, 512)])
+def test_rg_lru(b, s, d):
+    rng = np.random.default_rng(d)
+    a = jnp.asarray(rng.random((b, s, d)) * 0.9, jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, s, d)) * 0.1, jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((b, d)) * 0.1, jnp.float32)
+    y, hT = rg_lru.rg_lru(a, bb, h0, chunk=32, block_d=64)
+    wy, wh = ref.rg_lru_ref(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(y), wy, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), wh, atol=1e-4, rtol=1e-4)
+    ya, ha = ops.rg_lru_assoc(a, bb, h0)
+    np.testing.assert_allclose(np.asarray(ya), wy, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe_dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,dm,e,k,cap", [(64, 32, 8, 2, 32),
+                                          (128, 64, 16, 4, 64)])
+def test_moe_dispatch_kernel(t, dm, e, k, cap):
+    rng = np.random.default_rng(e)
+    tokens = jnp.asarray(rng.standard_normal((t, dm)), jnp.float32)
+    eidx = jnp.asarray(rng.integers(0, e, (t, k)))
+    flat_e = np.asarray(eidx).reshape(-1)
+    onehot = np.eye(e, dtype=np.int64)[flat_e]
+    pos = np.cumsum(onehot, axis=0) - onehot
+    flat_pos = pos[np.arange(len(flat_e)), flat_e]
+    gathered = jnp.repeat(tokens, k, axis=0)
+    got = moe_dispatch.moe_dispatch(gathered, jnp.asarray(flat_e),
+                                    jnp.asarray(flat_pos), e, cap)
+    want = ref.moe_dispatch_ref(np.asarray(gathered), flat_e, flat_pos,
+                                e, cap)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+def test_moe_paths_agree():
+    """Revet compaction path == dense einsum (MapReduce) path end-to-end."""
+    rng = np.random.default_rng(5)
+    t, dm, e, k, cap = 64, 32, 8, 2, 32
+    tokens = jnp.asarray(rng.standard_normal((t, dm)), jnp.float32)
+    logits = jnp.asarray(rng.standard_normal((t, e)), jnp.float32)
+    gates, eidx = jax.lax.top_k(jax.nn.softmax(logits), k)
+    expert_fn = lambda d: d * 2.0 + 1.0 * (d != 0)
+    got = ops.moe_dispatch_combine(tokens, gates, eidx, e, cap, expert_fn,
+                                   impl="pallas")
+    want = ops.moe_dense_einsum(tokens, gates, eidx, e, cap, expert_fn)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,267 @@
+"""SLTF codec + streaming-primitive semantics (paper §III) — unit & property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sltf
+from repro.core.sltf import Tok, bar, data_tok
+from repro.core import primitives as P
+
+
+# ---------------------------------------------------------------------------
+# Paper's literal examples
+# ---------------------------------------------------------------------------
+
+def test_paper_encoding_example():
+    # [[0, 1], [2]] -> 0, 1, Ω1, 2, Ω2  (§III-A)
+    toks = sltf.encode_ragged([[0, 1], [2]], ndim=2)
+    assert toks == [data_tok(0), data_tok(1), bar(1), data_tok(2), bar(2)]
+
+
+def test_paper_empty_tensor_distinctions():
+    # §III-A(b): [[]] vs [[],[]] vs [] have unique encodings.
+    assert sltf.encode_ragged([[]], 2) == [bar(1), bar(2)]
+    assert sltf.encode_ragged([[], []], 2) == [bar(1), bar(1), bar(2)]
+    assert sltf.encode_ragged([], 2) == [bar(2)]
+
+
+def test_paper_empty_tensor_reductions():
+    # §III-A(b): additive reduction distinguishes the three: [0], [0,0], [].
+    red = lambda toks: P.reduce_stream(lambda a, v: (a[0] + v[0],), (0,), toks)
+    assert sltf.decode_ragged(red(sltf.encode_ragged([[]], 2)), 1) == [[0]]
+    assert sltf.decode_ragged(red(sltf.encode_ragged([[], []], 2)), 1) == [[0, 0]]
+    assert sltf.decode_ragged(red(sltf.encode_ragged([], 2)), 1) == [[]]
+
+
+def test_decode_rejects_overdeep_barrier():
+    with pytest.raises(ValueError):
+        sltf.decode_ragged([bar(3)], ndim=2)
+
+
+def test_unterminated_stream_rejected():
+    with pytest.raises(ValueError):
+        sltf.decode_ragged([data_tok(1)], ndim=1)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: ragged tensors of bounded depth/size
+# ---------------------------------------------------------------------------
+
+def ragged(depth: int, max_len: int = 4):
+    if depth == 0:
+        return st.integers(-100, 100)
+    return st.lists(ragged(depth - 1, max_len), max_size=max_len)
+
+
+@given(ragged(1))
+def test_roundtrip_1d(x):
+    toks = sltf.encode_ragged(x, 1)
+    assert sltf.decode_ragged(toks, 1) == [x]
+
+
+@given(ragged(2))
+def test_roundtrip_2d(x):
+    toks = sltf.encode_ragged(x, 2)
+    assert sltf.decode_ragged(toks, 2) == [x]
+
+
+@given(ragged(3, max_len=3))
+@settings(max_examples=150)
+def test_roundtrip_3d(x):
+    toks = sltf.encode_ragged(x, 3)
+    assert sltf.decode_ragged(toks, 3) == [x]
+
+
+@given(ragged(2), ragged(2))
+def test_concatenated_tensors_decode_separately(a, b):
+    toks = sltf.encode_ragged(a, 2) + sltf.encode_ragged(b, 2)
+    assert sltf.decode_ragged(toks, 2) == [a, b]
+
+
+@given(ragged(2))
+def test_encoding_is_canonical_and_unique(x):
+    """No two distinct ragged tensors share an encoding (injectivity probe via
+    decode∘encode == id, plus barrier-count conservation)."""
+    toks = sltf.encode_ragged(x, 2)
+    n_outer = sum(1 for t in toks if t.level == 2)
+    assert n_outer == 1  # exactly one top-level barrier per tensor
+
+
+# ---------------------------------------------------------------------------
+# Primitive laws (composability contract, §III-B)
+# ---------------------------------------------------------------------------
+
+def barrier_seq(toks):
+    return [t.level for t in toks if sltf.is_bar(t)]
+
+
+@given(ragged(2))
+def test_filter_preserves_barriers(x):
+    toks = sltf.encode_ragged(x, 2)
+    out = P.filter_stream(lambda v: v % 2 == 0, toks)
+    assert barrier_seq(out) == barrier_seq(toks)
+
+
+@given(ragged(2))
+def test_elementwise_structure_invariant(x):
+    toks = sltf.encode_ragged(x, 2)
+    out = P.elementwise(lambda v: (v * 2 + 1,), toks)
+    assert barrier_seq(out) == barrier_seq(toks)
+    assert len(out) == len(toks)
+    # structure identical, values mapped
+    ref = [[v * 2 + 1 for v in row] for row in x]
+    assert sltf.decode_ragged(out, 2) == [ref]
+
+
+@given(ragged(2))
+def test_partition_merge_roundtrip(x):
+    """filter/merge (if/else with identity branches) is the identity up to
+    reordering within barrier groups — §III-B(c)."""
+    toks = sltf.encode_ragged(x, 2)
+    t_br, f_br = P.partition_stream(lambda v: v % 3 == 0, toks)
+    merged = P.forward_merge(t_br, f_br)
+    got = sltf.decode_ragged(merged, 2)[0]
+    assert [sorted(g) for g in got] == [sorted(g) for g in x]
+    assert barrier_seq(merged) == barrier_seq(toks)
+
+
+@given(ragged(2))
+def test_reduce_matches_python_sum(x):
+    toks = sltf.encode_ragged(x, 2)
+    out = P.reduce_stream(lambda a, v: (a[0] + v[0],), (0,), toks)
+    assert sltf.decode_ragged(out, 1) == [[sum(g) for g in x]]
+
+
+@given(ragged(2))
+def test_flatten_matches_python_flatten(x):
+    toks = sltf.encode_ragged(x, 2)
+    out = P.flatten(toks)
+    assert sltf.decode_ragged(out, 1) == [[v for g in x for v in g]]
+
+
+@given(ragged(1), st.integers(0, 5))
+def test_counter_expand_then_reduce_is_multiplication(x, n):
+    """foreach i in range(n): acc += 1  ==  n, per thread (expansion/reduction
+    pair wraps arbitrary code into a foreach — §III-B(b))."""
+    toks = sltf.encode_ragged(x, 1)
+    exp = P.counter_expand(toks, lambda v: (0, n, 1))
+    red = P.reduce_stream(lambda a, v: (a[0] + 1,), (0,), exp)
+    assert sltf.decode_ragged(red, 1) == [[n for _ in x]]
+
+
+@given(ragged(1), st.integers(0, 4))
+def test_fork_duplicates_without_hierarchy(x, n):
+    toks = sltf.encode_ragged(x, 1)
+    out = P.fork_expand(toks, lambda v: n)
+    dec = sltf.decode_ragged(out, 1)[0]
+    assert len(dec) == n * len(x)
+
+
+@given(ragged(2))
+def test_counter_expand_structure(x):
+    """Expansion adds exactly one level: depth-2 in, depth-3 out, with per-
+    element groups sized by the bound."""
+    toks = sltf.encode_ragged(x, 2)
+    exp = P.counter_expand(toks, lambda v: (0, abs(v) % 3, 1))
+    dec = sltf.decode_ragged(exp, 3)[0]
+    assert [[len(inner) for inner in row] for row in dec] == \
+        [[abs(v) % 3 for v in row] for row in x]
+
+
+@given(ragged(1))
+def test_broadcast_pairs_parent_with_children(x):
+    """broadcast: parent depth-1, child depth-2 (one group per parent elem)."""
+    parent = sltf.encode_ragged(x, 1)
+    child = P.counter_expand(parent, lambda v: (0, 2, 1))
+    # strip parent payload from child to simulate an independent link
+    child_only = P.elementwise(lambda v, i: (i,), child)
+    out = P.broadcast(parent, child_only)
+    dec = sltf.decode_ragged(out, 2)[0]
+    for vals, parent_val in zip(dec, x):
+        for item in vals:
+            assert item[1] == parent_val
+
+
+# ---------------------------------------------------------------------------
+# While-loop protocol (§III-B(d))
+# ---------------------------------------------------------------------------
+
+def test_while_countdown():
+    """Each thread decrements until zero; exits carry the iteration count."""
+    toks = sltf.encode_ragged([3, 0, 5], 1)
+
+    def body(wave):
+        cont, exits = [], []
+        for t in wave:
+            v = t.values[0]
+            if v <= 0:
+                exits.append(t)
+            else:
+                cont.append(Tok(0, (v - 1,)))
+        return cont, exits
+
+    out = P.while_loop(body, toks)
+    dec = sltf.decode_ragged(out, 1)[0]
+    assert sorted(dec) == [0, 0, 0]
+    assert barrier_seq(out) == [1]
+
+
+@given(st.lists(st.integers(0, 7), max_size=6))
+def test_while_iteration_counts(vals):
+    """Thread i loops exactly vals[i] times (count in payload slot 1)."""
+    toks = [Tok(0, (v, 0)) for v in vals] + [bar(1)]
+
+    def body(wave):
+        cont, exits = [], []
+        for t in wave:
+            v, c = t.values
+            if v <= 0:
+                exits.append(t)
+            else:
+                cont.append(Tok(0, (v - 1, c + 1)))
+        return cont, exits
+
+    out = P.while_loop(body, toks)
+    dec = sltf.decode_ragged(out, 1)[0]
+    counts = sorted(t[1] if isinstance(t, tuple) else t for t in dec)
+    assert counts == sorted(v for v in vals)
+
+
+def test_while_groups_do_not_mix():
+    """Threads of group 2 must not enter before group 1 drains (barrier
+    stalls the forward branch — §III-B(d))."""
+    toks = sltf.encode_ragged([[2], [1, 1]], 2)
+    seen_waves = []
+
+    def body(wave):
+        seen_waves.append([t.values[0] for t in wave])
+        cont, exits = [], []
+        for t in wave:
+            v = t.values[0]
+            (exits if v <= 0 else cont).append(Tok(0, (v - 1,)))
+        return cont, exits
+
+    out = P.while_loop(body, toks)
+    assert barrier_seq(out) == [1, 2]
+    # group 1's waves ([2] -> [1] -> [0]) all precede group 2's first wave
+    flat = [w for w in seen_waves if w]
+    assert flat[0] == [2] and flat[1] == [1]
+
+
+# ---------------------------------------------------------------------------
+# Array <-> token conversion
+# ---------------------------------------------------------------------------
+
+@given(ragged(2))
+def test_array_roundtrip(x):
+    toks = sltf.encode_ragged(x, 2)
+    arr = sltf.tokens_to_arrays(toks, n_vars=1, capacity=len(toks) + 3)
+    back = sltf.arrays_to_tokens(arr)
+    assert back == toks
+
+
+def test_array_stream_dtype_override():
+    toks = [data_tok(1.5), bar(1)]
+    arr = sltf.tokens_to_arrays(toks, 1, dtypes=[np.float32])
+    assert arr.payload[0].dtype == np.float32
+    assert sltf.arrays_to_tokens(arr)[0].values[0] == 1.5

@@ -1,0 +1,30 @@
+"""System-level behaviour: full compile pipeline invariants across apps."""
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core.compiler import compile_program
+from repro.core.machine import MachineParams, map_graph, scale_outer_parallelism
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_app_compiles_and_validates(name):
+    app = ALL_APPS[name]()
+    res = compile_program(app.prog)
+    res.dfg.validate()
+    stats = res.dfg.stats()
+    assert stats["contexts"] > 0 and stats["links"] > 0
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_app_maps_to_machine(name):
+    """Every app must fit the Table II machine at outer parallelism >= 1."""
+    app = ALL_APPS[name]()
+    res = compile_program(app.prog)
+    rep = map_graph(res.dfg, res.widths)
+    p = MachineParams()
+    assert rep.cu <= p.n_cu, f"{name}: {rep.cu} CUs > {p.n_cu}"
+    assert rep.mu <= p.n_mu, f"{name}: {rep.mu} MUs > {p.n_mu}"
+    assert rep.ag <= p.n_ag, f"{name}: {rep.ag} AGs > {p.n_ag}"
+    scale = scale_outer_parallelism(rep)
+    assert scale["outer"] >= 1
