@@ -1,0 +1,130 @@
+"""Backend benchmarks.
+
+* ``vectorvm_backends`` — times every app on the numpy and jax executor
+  backends, verifies bit-identical outputs + link-token stats, and writes
+  ``BENCH_vectorvm.json`` so the numpy-vs-jax perf trajectory is tracked
+  from PR 1 on (the jax route is XLA on CPU hosts, Pallas on TPU — the
+  ``route`` field in the JSON records which one ran).
+* ``reduce_micro`` — the `_reduce_out` vectorization micro-benchmark: the
+  historical per-token Python loop vs the vectorized windowed segmented
+  reduction that now backs ``NumpyBackend.segment_reduce``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.apps import ALL_APPS
+from repro.apps.common import run_app
+from repro.core.backend import (JaxBackend, _scalar_red,
+                                segment_reduce_window_np)
+
+BENCH_JSON = "BENCH_vectorvm.json"
+
+
+def _timed_run(app, backend):
+    _, vm, out = run_app(app, backend=backend)
+    return out, vm, vm.run_wall_s
+
+
+def vectorvm_backends(rows: list[dict], out_path: str = BENCH_JSON) -> None:
+    """Per-app numpy-vs-jax VectorVM timings -> rows + BENCH_vectorvm.json."""
+    jax_be = JaxBackend()            # auto route: Pallas on TPU, XLA else
+    apps = {}
+    for name in sorted(ALL_APPS):
+        app = ALL_APPS[name]()
+        out_np, vm_np, dt_np = _timed_run(app, "numpy")
+        _timed_run(app, jax_be)                 # warm the jit caches
+        out_jx, vm_jx, dt_jx = _timed_run(app, jax_be)
+        match = all(np.array_equal(out_np[k], out_jx[k]) for k in out_np) \
+            and vm_np.stats == vm_jx.stats
+        cell = {
+            "numpy_s": round(dt_np, 4),
+            "jax_s": round(dt_jx, 4),
+            "jax_over_numpy": round(dt_jx / max(dt_np, 1e-9), 2),
+            "match": bool(match),
+            "ticks": int(vm_np.stats["ticks"]),
+        }
+        apps[name] = cell
+        rows.append({"bench": "vectorvm", "name": name, **cell})
+    mismatched = sorted(n for n, c in apps.items() if not c["match"])
+    payload = {
+        "meta": {
+            "jax_backend": jax_be.name,
+            "route": jax_be.route,
+            "interpret": jax_be.interpret,
+            "note": "validation-size app instances; jax timings include "
+                    "per-window dispatch overhead (XLA on CPU hosts)",
+        },
+        "apps": apps,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    assert not mismatched, \
+        f"backend outputs/stats diverged on: {mismatched} (see {out_path})"
+
+
+# -- _reduce_out vectorization micro-benchmark --------------------------------
+
+
+def _legacy_reduce_loop(kinds, vals, op, init, acc, group_open):
+    """The pre-backend per-token `_reduce_out` loop (kept as the baseline)."""
+    out_kinds, out_vals = [], []
+    for i in range(len(kinds)):
+        k = int(kinds[i])
+        if k == 0:
+            if vals is not None:
+                acc = _scalar_red(op, acc, int(vals[i]))
+            group_open = True
+        elif k == 1:
+            out_kinds.append(0)
+            out_vals.append(acc)
+            acc = init
+            group_open = False
+        else:
+            if group_open:
+                out_kinds.append(0)
+                out_vals.append(acc)
+                acc = init
+                group_open = False
+            out_kinds.append(k - 1)
+            out_vals.append(0)
+    return (np.array(out_kinds, np.int64), np.array(out_vals, np.int64),
+            acc, group_open)
+
+
+def _synth_stream(n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    kinds = rng.choice([0, 0, 0, 0, 0, 0, 1, 2], size=n).astype(np.int64)
+    vals = rng.integers(-(1 << 31), 1 << 31, size=n).astype(np.int64)
+    return kinds, vals
+
+
+def _best_of(fn, reps: int = 3):
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def reduce_micro(rows: list[dict]) -> None:
+    for n in (1024, 16384, 131072):
+        kinds, vals = _synth_stream(n)
+        ref, t_loop = _best_of(
+            lambda: _legacy_reduce_loop(kinds, vals, "add", 0, 0, False))
+        got, t_vec = _best_of(
+            lambda: segment_reduce_window_np(kinds, vals, "add", 0, 0, False))
+        assert np.array_equal(ref[0], got[0]) \
+            and np.array_equal(ref[1], got[1]) \
+            and ref[2:] == got[2:], "vectorized reduce diverged from loop"
+        rows.append({
+            "bench": "micro", "name": f"reduce_n{n}",
+            "loop_us": round(t_loop * 1e6),
+            "vec_us": round(t_vec * 1e6),
+            "speedup": round(t_loop / max(t_vec, 1e-9), 1),
+        })

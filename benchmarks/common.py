@@ -1,12 +1,10 @@
 """Shared benchmark plumbing."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.apps import ALL_APPS
-from repro.core.compiler import CompileOptions, compile_program
+from repro.core.compiler import CompileOptions
 from repro.core.golden import Golden
 from repro.core.machine import MachineParams, map_graph, scale_outer_parallelism
 from repro.core.vector_vm import VectorVM, MACHINE_LANES
@@ -33,18 +31,14 @@ def build_bench_app(name: str):
 
 
 def run_vector_vm(app, opts: CompileOptions | None = None,
-                  check: bool = True, **vm_kw):
-    res = compile_program(app.prog, opts)
-    vm = VectorVM(res.dfg, app.dram_init, **vm_kw)
-    t0 = time.perf_counter()
-    out = vm.run(**app.params)
-    dt = time.perf_counter() - t0
-    if check:
-        for k, want in app.expected.items():
-            got = np.asarray(out[k])[: len(want)]
-            np.testing.assert_array_equal(got, want,
-                                          err_msg=f"{app.name}:{k}")
-    return res, vm, dt
+                  check: bool = True, backend=None, **vm_kw):
+    """Compile + run one app, timed. ``backend`` overrides ``opts.backend``
+    (a name from core/backend.py or an ExecutorBackend instance). Thin
+    delegate to apps.common.run_app so backend threading and result checking
+    live in one place."""
+    from repro.apps.common import run_app
+    res, vm, _ = run_app(app, opts, backend=backend, check=check, **vm_kw)
+    return res, vm, vm.run_wall_s
 
 
 def simt_cost(app) -> dict:

@@ -1,6 +1,9 @@
-"""Benchmark harness — one function per paper table/figure + roofline.
+"""Benchmark harness — one function per paper table/figure + roofline, plus
+the executor-backend suite.
 
     PYTHONPATH=src python -m benchmarks.run [--only table5]
+    PYTHONPATH=src python -m benchmarks.run --only vectorvm   # writes
+        BENCH_vectorvm.json (per-app numpy vs jax backend timings)
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark cell.
 """
@@ -15,11 +18,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table4,table5,fig12,fig13,"
-                         "fig14,roofline")
+                         "fig14,roofline,vectorvm,micro")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import figures, roofline, tables
+    from . import backends, figures, roofline, tables
     benches = {
         "table3": tables.table3_apps,
         "table4": tables.table4_resources,
@@ -28,7 +31,15 @@ def main() -> None:
         "fig13": figures.fig13_hierarchy_removal,
         "fig14": figures.fig14_load_balance,
         "roofline": roofline.roofline_rows,
+        "vectorvm": backends.vectorvm_backends,
+        "micro": backends.reduce_micro,
     }
+    if only:
+        unknown = only - set(benches)
+        if unknown:
+            print(f"unknown bench name(s): {sorted(unknown)}; "
+                  f"available: {sorted(benches)}", file=sys.stderr)
+            sys.exit(2)
     rows: list[dict] = []
     print("name,us_per_call,derived")
     for bname, fn in benches.items():

@@ -9,7 +9,7 @@ of code MapReduce/Spatial cannot express (§I).
 """
 import numpy as np
 
-from repro.core.compiler import compile_program
+from repro.core.compiler import CompileOptions, compile_program
 from repro.core.golden import Golden
 from repro.core.lang import Prog
 from repro.core.machine import MachineParams, map_graph, scale_outer_parallelism
@@ -62,6 +62,16 @@ def main():
     print("VectorVM lengths: ", list(vec["lengths"]))
     print(f"lane occupancy:    {vm.lane_occupancy():.3f} "
           "(dense under divergence — the dataflow-threads claim)")
+
+    # 4b. same program, hot loops routed through the Pallas kernel layer
+    # (CompileOptions(backend="jax"): XLA on CPU hosts, real kernels on TPU;
+    # bit-identical outputs and link-token stats — see DESIGN.md §3)
+    res_jax = compile_program(p, CompileOptions(backend="jax"))
+    vm_jax = VectorVM(res_jax.dfg, data, backend=res_jax.options.backend)
+    vec_jax = vm_jax.run(count=len(strings))
+    assert all(np.array_equal(vec[k], vec_jax[k]) for k in vec)
+    assert vm.stats == vm_jax.stats
+    print(f"jax backend:       {vm_jax.backend.name} — bit-identical")
 
     # 5. map to the physical vRDA (Table II/IV)
     rep = map_graph(res.dfg, res.widths, MachineParams())

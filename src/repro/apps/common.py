@@ -5,7 +5,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..core.compiler import CompileOptions, CompileResult, compile_program
 from ..core.lang import Prog
+from ..core.vector_vm import VectorVM
 
 
 @dataclass
@@ -23,6 +25,38 @@ class App:
     expected: dict[str, np.ndarray]
     bytes_processed: int
     meta: dict = field(default_factory=dict)
+
+
+def check_app(app: App, got: dict) -> None:
+    """Assert a run's DRAM state matches the app's reference output."""
+    for name, want in app.expected.items():
+        got_arr = np.asarray(got[name])[: len(want)]
+        np.testing.assert_array_equal(
+            got_arr, want, err_msg=f"{app.name}: dram '{name}' mismatch")
+
+
+def run_app(app: App, opts: CompileOptions | None = None,
+            backend=None, check: bool = True, **vm_kw
+            ) -> tuple[CompileResult, VectorVM, dict]:
+    """Compile and execute one app on the VectorVM.
+
+    The executor backend comes from ``backend`` when given, else from
+    ``opts.backend`` (``CompileOptions(backend="jax")`` routes the hot loops
+    through the Pallas kernel layer — see core/backend.py).
+    Returns ``(compile_result, vm, dram_out)``; the executor wall time (the
+    ``vm.run`` call only, excluding compilation) lands in ``vm.run_wall_s``.
+    """
+    import time
+    res = compile_program(app.prog, opts)
+    vm = VectorVM(res.dfg, app.dram_init,
+                  backend=backend if backend is not None
+                  else res.options.backend, **vm_kw)
+    t0 = time.perf_counter()
+    out = vm.run(**app.params)
+    vm.run_wall_s = time.perf_counter() - t0
+    if check:
+        check_app(app, out)
+    return res, vm, out
 
 
 def pack_strings(strings: list[bytes]) -> tuple[np.ndarray, np.ndarray]:

@@ -30,6 +30,7 @@ class CompileOptions:
     hoist_allocators: bool = True    # §V-B(b) (+ bufferization)
     subword_packing: bool = True     # §V-B(d) — affects machine accounting
     eliminate_hierarchy: bool = True # §V-A(b) — honors pragma annotations
+    backend: str = "numpy"           # VectorVM executor backend (core/backend)
 
 
 @dataclasses.dataclass

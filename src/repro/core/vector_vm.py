@@ -7,12 +7,24 @@ vectors*. Each context processes up to ``VLEN`` tokens per tick:
 * element-wise body ops run on whole windows (barrier lanes masked) — the
   analogue of the VPU executing a 128-lane vector;
 * filter outputs compact surviving lanes (``kernels/stream_compact`` is the
-  Pallas kernel for this hot spot; here its numpy oracle drives the
-  simulation);
+  Pallas kernel for this hot spot);
 * reductions use windowed segmented reduction with a carried accumulator
   (``kernels/segment_reduce``);
 * the merge heads follow exactly the TokenVM protocols, but move data-*runs*
   per step instead of single tokens.
+
+The lane-level primitives behind all four bullets live behind the pluggable
+:class:`~repro.core.backend.ExecutorBackend` (``core/backend.py``):
+``backend="numpy"`` is the bit-exact TokenVM-validated oracle,
+``backend="jax"`` dispatches through ``kernels/ops.py`` onto the Pallas
+kernels (interpret mode on CPU, the real thing on TPU). The scheduler —
+heads, queues, back-pressure, memory — is backend-agnostic; both backends
+must produce identical outputs *and* identical ``stats`` token counts
+(``tests/test_backends.py`` enforces this on every app).
+
+The scheduler runs in *supersteps*: each tick snapshots the set of ready
+contexts (tokens waiting and output room available) and fires them all,
+instead of probing every context one at a time.
 
 Queues are finite (the paper's deadlock-avoidance/retiming buffers, §V-D(b));
 allocation back-pressure is modeled faithfully: a context stalls when its
@@ -32,6 +44,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import ir
+from .backend import ExecutorBackend, _w32, make_backend
 from .dfg import (DFG, BodyOp, Context, CounterHead, ForwardMergeHead,
                   FwdBwdMergeHead, SingleHead, SourceHead, ZipHead)
 
@@ -41,11 +54,6 @@ MACHINE_LANES = 16  # the vRDA's lanes — used by the cycle cost model
 _DTYPE_MASK = {"i8": 0xFF, "i16": 0xFFFF, "i32": None}
 _I64 = np.int64
 _WRAP = np.uint32   # wrap-to-32-bit helper dtype
-
-
-def _w32(a: np.ndarray) -> np.ndarray:
-    """Wrap int64 array to signed 32-bit semantics."""
-    return a.astype(np.uint32).astype(np.int32).astype(_I64)
 
 
 class VectorDeadlock(RuntimeError):
@@ -127,9 +135,11 @@ class _RedState:
 class VectorVM:
     def __init__(self, g: DFG, dram_init: dict[str, np.ndarray] | None = None,
                  queue_cap: int = 1 << 16, vlen: int = VLEN,
-                 pool_override: dict[str, int] | None = None):
+                 pool_override: dict[str, int] | None = None,
+                 backend: str | ExecutorBackend | None = "numpy"):
         self.g = g
         self.vlen = vlen
+        self.backend = make_backend(backend)
         self.queues: dict[int, _Queue] = {
             lid: _Queue(len(l.vars), queue_cap) for lid, l in g.links.items()}
         self.source = _Queue(len(getattr(g, "source_vars", ())), 64)
@@ -172,6 +182,7 @@ class VectorVM:
         Returns False if an allocation stalled (caller must shrink window)."""
         data = kinds == 0
         n = len(kinds)
+        be = self.backend
         for op in ctx.body:
             k = op.op
             if k == "const":
@@ -180,14 +191,14 @@ class VectorVM:
                 regs[op.dst] = regs[op.srcs[0]].copy()
             elif k == "select":
                 c, a, b = (regs[s] for s in op.srcs)
-                regs[op.dst] = np.where(c != 0, a, b)
+                regs[op.dst] = be.select(c, a, b)
             elif k == "not":
-                regs[op.dst] = (regs[op.srcs[0]] == 0).astype(_I64)
+                regs[op.dst] = be.logical_not(regs[op.srcs[0]])
             elif k == "neg":
-                regs[op.dst] = _w32(-regs[op.srcs[0]])
+                regs[op.dst] = be.neg(regs[op.srcs[0]])
             elif k in ir.BINOPS:
-                regs[op.dst] = _vec_binop(k, regs[op.srcs[0]],
-                                          regs[op.srcs[1]])
+                regs[op.dst] = be.binop(k, regs[op.srcs[0]],
+                                        regs[op.srcs[1]])
             elif k == "sram_load":
                 pool = self.g.pools[op.space]
                 mem = self.pools[op.space]
@@ -294,6 +305,7 @@ class VectorVM:
         self.ctx_lane_cycles[ctx.id] += n
         self.ctx_busy_cycles[ctx.id] += max(
             -(-n // MACHINE_LANES), 1) if n else 0
+        be = self.backend
         for oi, o in enumerate(ctx.outs):
             q = self.queues[o.link]
             if o.kind == "reduce":
@@ -305,52 +317,34 @@ class VectorVM:
                 keep = ~data | (regs[o.pred] != 0)
             else:
                 # pass output, or barrier-only window: barriers reach all outs
-                keep = np.ones(n, bool)
-            out_kinds = kinds[keep]
-            if o.lower_barrier:
-                m = out_kinds != 1           # drop Ω1, lower Ωn
-                out_kinds = np.where(out_kinds > 1, out_kinds - 1,
-                                     out_kinds)[m]
-                keep2 = m
-            else:
-                keep2 = np.ones(len(out_kinds), bool)
+                keep = None
             if o.values and bool(data.any()):
                 payload = np.stack([regs[v] for v in o.values], axis=1)
-                payload = payload[keep][keep2]
             else:
+                payload = None
+            out_kinds = kinds
+            if keep is not None:
+                out_kinds, payload = be.compact(keep, out_kinds, payload)
+            if o.lower_barrier:
+                out_kinds, payload = be.lower_barriers(out_kinds, payload)
+            if payload is None:
                 payload = np.zeros((len(out_kinds), q.nvars), _I64)
             q.push(out_kinds, payload)
             self.stats["link_tokens", o.link] += len(out_kinds)
 
     def _reduce_out(self, ctx, oi, o, kinds, regs) -> None:
         """Windowed segmented reduction with carried accumulator
-        (= kernels/segment_reduce semantics)."""
+        (= kernels/segment_reduce semantics), dispatched to the backend."""
         st = self._red[(ctx.id, oi)]
         vals = regs[o.values[0]] if o.values else None
-        out_kinds, out_vals = [], []
-        for i in range(len(kinds)):            # per-token; windows are small
-            k = int(kinds[i])
-            if k == 0:
-                if vals is not None:
-                    st.acc = _scalar_red(o.reduce_op, st.acc, int(vals[i]))
-                st.group_open = True
-            elif k == 1:
-                out_kinds.append(0)
-                out_vals.append(st.acc)
-                st.acc = o.reduce_init
-                st.group_open = False
-            else:
-                if st.group_open:
-                    out_kinds.append(0)
-                    out_vals.append(st.acc)
-                    st.acc = o.reduce_init
-                    st.group_open = False
-                out_kinds.append(k - 1)
-                out_vals.append(0)
+        out_kinds, out_vals, st.acc, st.group_open = \
+            self.backend.segment_reduce(kinds, vals, o.reduce_op,
+                                        o.reduce_init, st.acc, st.group_open)
         q = self.queues[o.link]
-        q.push(np.array(out_kinds, _I64),
-               np.array(out_vals, _I64).reshape(-1, 1)
+        q.push(out_kinds,
+               out_vals.reshape(-1, 1)
                if q.nvars else np.zeros((len(out_kinds), 0), _I64))
+        self.stats["link_tokens", o.link] += len(out_kinds)
 
     # ------------------------------------------------------------------- heads
     def _min_out_room(self, ctx: Context) -> int:
@@ -419,13 +413,9 @@ class VectorVM:
         if n == 0:
             return False
         peeked = [q.peek(n) for q in qs]
-        # aligned prefix: identical kind sequences
+        # aligned prefix: identical kind sequences (backend run selection)
         ref = peeked[0][0][:n]
-        L = n
-        for kinds, _ in peeked[1:]:
-            diff = np.nonzero(kinds[:n] != ref)[0]
-            if len(diff):
-                L = min(L, int(diff[0]))
+        L = self.backend.first_mismatch(ref, [k[:n] for k, _ in peeked[1:]])
         if L == 0:
             raise VectorDeadlock(f"zip structural mismatch in {ctx.name}")
         L = self._alloc_limit(ctx, ref[:L])
@@ -452,8 +442,8 @@ class VectorVM:
         while emitted < budget:
             ka, va = qa.peek(budget - emitted)
             kb, vb = qb.peek(budget - emitted)
-            ra = _data_run(ka)
-            rb = _data_run(kb)
+            ra = self.backend.data_run(ka)
+            rb = self.backend.data_run(kb)
             if ra:
                 out_kinds.append(ka[:ra].copy())
                 out_vals.append(va[:ra].copy())
@@ -502,7 +492,7 @@ class VectorVM:
                 # threads can retire (and free buffers) before the group's
                 # barrier has cleared the upstream allocator (§III-B(d))
                 kb, vb = qb.peek(budget)
-                brun = _data_run(kb)
+                brun = self.backend.data_run(kb)
                 if brun:
                     done = self._process_run(ctx, vars_f, kb[:brun],
                                              vb[:brun])
@@ -514,7 +504,7 @@ class VectorVM:
                 k, v = qf.peek(budget)
                 if len(k) == 0:
                     return progress
-                run = _data_run(k)
+                run = self.backend.data_run(k)
                 if run:
                     done = self._process_run(ctx, vars_f, k[:run], v[:run])
                     if done == 0:
@@ -536,7 +526,7 @@ class VectorVM:
                 k, v = qb.peek(budget)
                 if len(k) == 0:
                     return progress
-                run = _data_run(k)
+                run = self.backend.data_run(k)
                 if run:
                     done = self._process_run(ctx, vars_f, k[:run], v[:run])
                     if done == 0:
@@ -642,6 +632,44 @@ class VectorVM:
         return progress
 
     # --------------------------------------------------------------- scheduler
+    def _ready(self, ctx: Context) -> bool:
+        """Conservative readiness: True whenever ``_fire`` *might* progress.
+
+        Must never return False when ``_fire`` would return True — the
+        superstep scheduler only fires the ready set, so a false negative
+        would strand tokens. False positives merely waste one probe."""
+        if self._min_out_room(ctx) <= 0:
+            return False
+        h = ctx.head
+        if isinstance(h, SourceHead):
+            return len(self.source) > 0
+        if isinstance(h, SingleHead):
+            return len(self.queues[h.link]) > 0
+        if isinstance(h, ZipHead):
+            return all(len(self.queues[l]) > 0 for l in h.links)
+        if isinstance(h, ForwardMergeHead):
+            return len(self.queues[h.a]) > 0 or len(self.queues[h.b]) > 0
+        if isinstance(h, FwdBwdMergeHead):
+            return (len(self.queues[h.fwd]) > 0
+                    or len(self.queues[h.back]) > 0)
+        if isinstance(h, CounterHead):
+            return self._cs[ctx.id].active or len(self.queues[h.link]) > 0
+        return True
+
+    def _superstep(self, order: list[Context]) -> bool:
+        """One batched tick: snapshot the ready set, then fire all of it.
+
+        Firing all ready contexts against a tick-start snapshot (instead of
+        probing every context one at a time) skips the idle majority of the
+        graph each tick — on deep pipelines most contexts are waiting on
+        upstream barriers at any moment."""
+        ready = [ctx for ctx in order if self._ready(ctx)]
+        progress = False
+        for ctx in ready:
+            if self._fire(ctx):
+                progress = True
+        return progress
+
     def run(self, max_ticks: int = 1_000_000, **params) -> dict[str, np.ndarray]:
         src_vars = getattr(self.g, "source_vars", ())
         row = np.array([[ir.wrap32(int(params[p])) for p in src_vars]], _I64)
@@ -649,10 +677,7 @@ class VectorVM:
         self.source.push(np.ones(1, _I64), np.zeros((1, len(src_vars)), _I64))
         order = list(self.g.contexts.values())
         for tick in range(max_ticks):
-            progress = False
-            for ctx in order:
-                if self._fire(ctx):
-                    progress = True
+            progress = self._superstep(order)
             self.stats["ticks"] += 1
             if not progress:
                 break
@@ -679,92 +704,5 @@ class VectorVM:
         return useful / issued if issued else 1.0
 
 
-def _data_run(kinds: np.ndarray) -> int:
-    """Length of the leading run of data tokens."""
-    bars = np.nonzero(kinds != 0)[0]
-    return int(bars[0]) if len(bars) else len(kinds)
-
-
 def _empty_regs(vars) -> dict[str, np.ndarray]:
     return {v: np.zeros(1, _I64) for v in vars}
-
-
-def _vec_binop(op: str, a: np.ndarray, b: np.ndarray) -> np.ndarray:
-    u32 = lambda x: x.astype(np.uint32)
-    if op == "add":
-        return _w32(a + b)
-    if op == "sub":
-        return _w32(a - b)
-    if op == "mul":
-        return _w32(a * b)
-    if op == "sdiv":
-        q = np.zeros_like(a)
-        nz = b != 0
-        q[nz] = (np.abs(a[nz]) // np.abs(b[nz]))
-        sign = np.where((a < 0) != (b < 0), -1, 1)
-        return _w32(q * sign)
-    if op == "udiv":
-        out = np.zeros_like(a)
-        nz = b != 0
-        out[nz] = u32(a[nz]) // u32(b[nz])
-        return _w32(out)
-    if op == "smod":
-        r = np.zeros_like(a)
-        nz = b != 0
-        r[nz] = np.abs(a[nz]) % np.abs(b[nz])
-        return _w32(np.where(a < 0, -r, r))
-    if op == "umod":
-        out = np.zeros_like(a)
-        nz = b != 0
-        out[nz] = u32(a[nz]) % u32(b[nz])
-        return _w32(out)
-    if op == "and":
-        return _w32(a & b)
-    if op == "or":
-        return _w32(a | b)
-    if op == "xor":
-        return _w32(a ^ b)
-    if op == "shl":
-        return _w32(a << (b & 31))
-    if op == "lshr":
-        return _w32(u32(a) >> u32(b & 31))
-    if op == "ashr":
-        return _w32(a.astype(np.int32) >> (b & 31).astype(np.int32))
-    if op == "eq":
-        return (a == b).astype(_I64)
-    if op == "ne":
-        return (a != b).astype(_I64)
-    if op == "slt":
-        return (a < b).astype(_I64)
-    if op == "sle":
-        return (a <= b).astype(_I64)
-    if op == "sgt":
-        return (a > b).astype(_I64)
-    if op == "sge":
-        return (a >= b).astype(_I64)
-    if op == "ult":
-        return (u32(a) < u32(b)).astype(_I64)
-    if op == "ule":
-        return (u32(a) <= u32(b)).astype(_I64)
-    if op == "min":
-        return np.minimum(a, b)
-    if op == "max":
-        return np.maximum(a, b)
-    raise NotImplementedError(op)
-
-
-def _scalar_red(op: str, a: int, b: int) -> int:
-    from .ir import wrap32
-    if op == "add":
-        return wrap32(a + b)
-    if op == "min":
-        return min(a, b)
-    if op == "max":
-        return max(a, b)
-    if op == "and":
-        return a & b
-    if op == "or":
-        return a | b
-    if op == "xor":
-        return wrap32(a ^ b)
-    raise NotImplementedError(op)

@@ -100,6 +100,381 @@ def segment_reduce(kinds, vals, init: float = 0.0, op: str = "add",
             (float(carry[0]), bool(carry[1])))
 
 
+# -- VectorVM executor entry points --------------------------------------------
+#
+# These are the hot loops of core/vector_vm.py routed through this layer (see
+# core/backend.py and DESIGN.md §3). Contract: int64 numpy in, int64 numpy out,
+# bit-identical to the NumpyBackend oracle. ``route="pallas"`` drives the
+# Pallas kernels above (interpret mode off-TPU); ``route="jnp"`` is the jit'd
+# XLA path used where interpret-mode Pallas is impractically slow — the same
+# fallback policy the LM-stack wrappers in this file already follow.
+
+_VM_PAD_MIN = 8
+_INT32_MIN = -(1 << 31)
+_I64 = np.int64
+
+
+def _vm_pad_len(n: int) -> int:
+    """Round window length up to a power of two: windows are <= VLEN but of
+    arbitrary length, and padding bounds the number of XLA compilations."""
+    return max(_VM_PAD_MIN, 1 << max(n - 1, 0).bit_length())
+
+
+def _vm_wrap32(a):
+    return np.asarray(a, _I64).astype(np.uint32).astype(np.int32).astype(_I64)
+
+
+# ---- element-wise body windows ----
+
+
+def _vm_ew_impl(op, a, b):
+    """IR binop on int32 jnp arrays, 32-bit wrap semantics (== numpy oracle)."""
+    i32 = jnp.int32
+    u32 = lambda x: x.astype(jnp.uint32)
+    if op == "add":
+        return a + b
+    if op == "sub":
+        return a - b
+    if op == "mul":
+        return a * b
+    if op == "sdiv":
+        # C-style truncating division; guard b==0 (-> 0) and the
+        # INT_MIN/-1 overflow (-> INT_MIN, matching wrap32)
+        trap = (a == i32(_INT32_MIN)) & (b == i32(-1))
+        safe = jnp.where((b == 0) | trap, i32(1), b)
+        q = jax.lax.div(a, safe)
+        q = jnp.where(trap, i32(_INT32_MIN), q)
+        return jnp.where(b == 0, i32(0), q)
+    if op == "udiv":
+        safe = jnp.where(b == 0, jnp.uint32(1), u32(b))
+        q = jax.lax.div(u32(a), safe).astype(i32)
+        return jnp.where(b == 0, i32(0), q)
+    if op == "smod":
+        trap = (a == i32(_INT32_MIN)) & (b == i32(-1))
+        safe = jnp.where((b == 0) | trap, i32(1), b)
+        r = jax.lax.rem(a, safe)
+        return jnp.where((b == 0) | trap, i32(0), r)
+    if op == "umod":
+        safe = jnp.where(b == 0, jnp.uint32(1), u32(b))
+        r = jax.lax.rem(u32(a), safe).astype(i32)
+        return jnp.where(b == 0, i32(0), r)
+    if op == "and":
+        return a & b
+    if op == "or":
+        return a | b
+    if op == "xor":
+        return a ^ b
+    if op == "shl":
+        return jnp.left_shift(a, b & 31)
+    if op == "lshr":
+        return jnp.right_shift(u32(a), u32(b & 31)).astype(i32)
+    if op == "ashr":
+        return jnp.right_shift(a, b & 31)
+    if op == "eq":
+        return (a == b).astype(i32)
+    if op == "ne":
+        return (a != b).astype(i32)
+    if op == "slt":
+        return (a < b).astype(i32)
+    if op == "sle":
+        return (a <= b).astype(i32)
+    if op == "sgt":
+        return (a > b).astype(i32)
+    if op == "sge":
+        return (a >= b).astype(i32)
+    if op == "ult":
+        return (u32(a) < u32(b)).astype(i32)
+    if op == "ule":
+        return (u32(a) <= u32(b)).astype(i32)
+    if op == "min":
+        return jnp.minimum(a, b)
+    if op == "max":
+        return jnp.maximum(a, b)
+    raise NotImplementedError(op)
+
+
+_VM_EW_CACHE: dict = {}
+
+
+def _vm_ew(op):
+    fn = _VM_EW_CACHE.get(op)
+    if fn is None:
+        fn = _VM_EW_CACHE[op] = jax.jit(
+            lambda a, b, _op=op: _vm_ew_impl(_op, a, b))
+    return fn
+
+
+def _vm_i32_pad(a, n: int, m: int, fill: int = 0) -> np.ndarray:
+    out = np.full(m, fill, np.int32)
+    out[:n] = np.asarray(a)[:n]
+    return out
+
+
+def vm_binop(op: str, a, b) -> np.ndarray:
+    n = len(a)
+    m = _vm_pad_len(n)
+    out = _vm_ew(op)(_vm_i32_pad(a, n, m), _vm_i32_pad(b, n, m))
+    return np.asarray(out, np.int32)[:n].astype(_I64)
+
+
+def vm_unop(op: str, a) -> np.ndarray:
+    n = len(a)
+    m = _vm_pad_len(n)
+    ai = _vm_i32_pad(a, n, m)
+    if op == "neg":
+        out = _vm_ew("sub")(np.zeros(m, np.int32), ai)
+    elif op == "not":
+        out = _vm_ew("eq")(ai, np.zeros(m, np.int32))
+    else:
+        raise NotImplementedError(op)
+    return np.asarray(out, np.int32)[:n].astype(_I64)
+
+
+@jax.jit
+def _jnp_select(c, a, b):
+    return jnp.where(c != 0, a, b)
+
+
+def vm_select(c, a, b) -> np.ndarray:
+    n = len(c)
+    m = _vm_pad_len(n)
+    out = _jnp_select(_vm_i32_pad(c, n, m), _vm_i32_pad(a, n, m),
+                      _vm_i32_pad(b, n, m))
+    return np.asarray(out, np.int32)[:n].astype(_I64)
+
+
+# ---- window compaction (filter / discard / barrier lowering) ----
+
+
+@jax.jit
+def _jnp_compact(keep, cols):
+    k = keep != 0
+    ki = k.astype(jnp.int32)
+    pos = jnp.cumsum(ki) - ki                    # exclusive output positions
+    n = cols.shape[0]
+    tgt = jnp.where(k, pos, n)                   # out-of-bounds rows drop
+    out = jnp.zeros_like(cols).at[tgt].set(cols, mode="drop")
+    return out, ki.sum()
+
+
+def vm_compact(keep, kinds, payload, route: str = "jnp",
+               interpret: bool = True
+               ) -> tuple[np.ndarray, np.ndarray | None]:
+    """Window compaction with the kinds column riding along the payload.
+
+    ``keep`` bool [N]; ``kinds`` int64 [N]; ``payload`` int64 [N, D] or None.
+    The kinds are stacked as column 0 so one kernel pass compacts both.
+    """
+    n = len(kinds)
+    d = 0 if payload is None else payload.shape[1]
+    if n == 0:
+        return (np.zeros(0, _I64),
+                None if payload is None else np.zeros((0, d), _I64))
+    cols = np.zeros((n, d + 1), np.int32)
+    cols[:, 0] = kinds
+    if d:
+        cols[:, 1:] = payload
+    if route == "pallas":
+        out, cnt = stream_compact(np.asarray(keep, np.int32), cols,
+                                  interpret=interpret)
+        cnt = int(cnt)
+        out = np.asarray(out)[:cnt].astype(_I64)
+    else:
+        m = _vm_pad_len(n)
+        kp = np.zeros(m, np.int32)
+        kp[:n] = np.asarray(keep, np.int32)
+        cp = np.zeros((m, d + 1), np.int32)
+        cp[:n] = cols
+        o, c = _jnp_compact(kp, cp)
+        cnt = int(c)
+        out = np.asarray(o)[:cnt].astype(_I64)
+    return out[:, 0], (out[:, 1:] if payload is not None else None)
+
+
+# ---- windowed segmented reduction ----
+
+
+def _jnp_segred_impl(op, kinds, vals, init, acc, group_open):
+    """One reduce window on int32 jnp arrays; returns packed [2N, 2] slots
+    (kind, value) with NOTHING = -1 markers, plus the emission count."""
+    n = kinds.shape[0]
+    is_bar = kinds > 0
+    bi = is_bar.astype(jnp.int32)
+    seg = jnp.cumsum(bi) - bi
+    data = ~is_bar
+    start = jnp.full((n + 1,), init, jnp.int32).at[0].set(acc)
+    if op == "add":
+        contrib = jnp.where(data, vals, 0)
+        g = start + jax.ops.segment_sum(contrib, seg, num_segments=n + 1)
+    elif op == "min":
+        contrib = jnp.where(data, vals, jnp.int32(2**31 - 1))
+        g = jnp.minimum(start, jax.ops.segment_min(
+            contrib, seg, num_segments=n + 1))
+    elif op == "max":
+        contrib = jnp.where(data, vals, jnp.int32(_INT32_MIN))
+        g = jnp.maximum(start, jax.ops.segment_max(
+            contrib, seg, num_segments=n + 1))
+    else:
+        raise NotImplementedError(op)
+    cnt = jax.ops.segment_sum(data.astype(jnp.int32), seg,
+                              num_segments=n + 1)
+    open_ = cnt > 0
+    open_ = open_.at[0].set(open_[0] | (group_open != 0))
+    is_one = kinds == 1
+    is_hi = kinds > 1
+    emit = is_one | (is_hi & open_[seg])
+    noth = jnp.int32(-1)
+    k0 = jnp.where(emit, 0, noth)
+    v0 = jnp.where(emit, g[seg], 0)
+    k1 = jnp.where(is_hi, kinds - 1, noth)
+    kk = jnp.stack([k0, k1], axis=1).reshape(-1)
+    vv = jnp.stack([v0, jnp.zeros_like(v0)], axis=1).reshape(-1)
+    cols = jnp.stack([kk, vv], axis=1)
+    return _jnp_compact(kk != noth, cols)
+
+
+_VM_SEGRED_CACHE: dict = {}
+
+
+def _vm_segred(op):
+    fn = _VM_SEGRED_CACHE.get(op)
+    if fn is None:
+        fn = _VM_SEGRED_CACHE[op] = jax.jit(
+            lambda k, v, i, a, o, _op=op: _jnp_segred_impl(_op, k, v, i, a, o))
+    return fn
+
+
+def _pallas_segred_add(kinds, vals, init: int, acc: int, group_open: bool,
+                       interpret: bool) -> tuple[np.ndarray, np.ndarray]:
+    """Add-reduction window through the Pallas segment_reduce kernel.
+
+    The kernel is f32; int32 payloads split into two exact-in-f32 16-bit
+    halves (the ``stream_compact`` trick): per-segment half-sums stay below
+    2^24, so ``(hi << 16) + lo`` recombines the exact 32-bit wrapped sum.
+    The carried accumulator enters as a prepended data token of value
+    ``wrap32(acc - init)`` — it both seeds segment 0 and marks the group open.
+    """
+    k = np.asarray(kinds, np.int32)
+    v = np.asarray(vals, _I64)
+    if group_open:
+        k = np.concatenate([np.zeros(1, np.int32), k])
+        v = np.concatenate([_vm_wrap32(np.asarray([acc - init])), v])
+    n = len(k)
+    block = _sr.DEFAULT_BLOCK
+    pad = (-n) % block
+    if pad:   # identity data tokens: no emissions, tail carry is host-side
+        k = np.concatenate([k, np.zeros(pad, np.int32)])
+        v = np.concatenate([v, np.zeros(pad, _I64)])
+    u = v.astype(np.uint32)
+    hi = (u >> 16).astype(np.float32)
+    lo = (u & 0xFFFF).astype(np.float32)
+    out_kind, sum_hi, _ = _sr.segment_reduce_blocks(
+        jnp.asarray(k), jnp.asarray(hi), 0.0, block=block,
+        interpret=interpret)
+    _, sum_lo, _ = _sr.segment_reduce_blocks(
+        jnp.asarray(k), jnp.asarray(lo), 0.0, block=block,
+        interpret=interpret)
+    kind2 = np.asarray(out_kind, _I64)                     # [N, 2]
+    h = np.asarray(sum_hi, np.float64).astype(_I64)
+    l = np.asarray(sum_lo, np.float64).astype(_I64)
+    val2 = np.where(kind2 == 0, _vm_wrap32(init + (h << 16) + l), 0)
+    flat_k = kind2.ravel()
+    keep = flat_k != _sr.NOTHING
+    return flat_k[keep], val2.ravel()[keep]
+
+
+def _vm_segred_carry(kinds, vals, op: str, init: int, acc: int,
+                     group_open: bool) -> tuple[int, bool]:
+    """Exact accumulator carry for the *non-degenerate* state (group open,
+    or acc == init): only the trailing segment matters, and any barrier in
+    the window leaves it starting from ``init`` (the first barrier always
+    emits when the group is open; with acc == init the distinction is moot).
+    O(tail) host-side int bookkeeping — no oracle re-run."""
+    kinds = np.asarray(kinds, _I64)
+    bar_idx = np.nonzero(kinds > 0)[0]
+    if len(bar_idx):
+        tail_start, start, open_in = int(bar_idx[-1]) + 1, init, False
+    else:
+        tail_start, start, open_in = 0, acc, group_open
+    tv = np.asarray(vals, _I64)[tail_start:]
+    new_open = open_in or len(tv) > 0
+    if op == "add":
+        new_acc = int(_vm_wrap32(np.asarray([start + int(tv.sum())]))[0])
+    elif op == "min":
+        new_acc = min(start, int(tv.min())) if len(tv) else start
+    else:   # max
+        new_acc = max(start, int(tv.max())) if len(tv) else start
+    return new_acc, new_open
+
+
+def vm_segment_reduce(kinds, vals, op: str, init: int, acc: int,
+                      group_open: bool, route: str = "jnp",
+                      interpret: bool = True
+                      ) -> tuple[np.ndarray, np.ndarray, int, bool]:
+    """Windowed segmented reduction (executor entry point).
+
+    The carried accumulator (exact int bookkeeping) is computed host-side;
+    emissions run on the requested jax route. Ops outside a route's coverage
+    (non-add on Pallas; bitwise ops on jnp, which has no segment_{and,or,xor})
+    fall back to the ground truth wholesale.
+    """
+    from ..core.backend import segment_reduce_window_np
+    covered = ("add",) if route == "pallas" else ("add", "min", "max")
+    degenerate = (not group_open) and acc != init
+    # degenerate carry (closed group, acc != init) never arises from VM
+    # execution — a non-emitting barrier carries the accumulator through,
+    # which the reset-per-barrier kernels cannot express; ground truth runs it
+    if vals is None or op not in covered or degenerate:
+        return segment_reduce_window_np(kinds, vals, op, init, acc,
+                                        group_open)
+    new_acc, new_open = _vm_segred_carry(kinds, vals, op, init, acc,
+                                         group_open)
+    if route == "pallas":
+        out_k, out_v = _pallas_segred_add(kinds, vals, init, acc, group_open,
+                                          interpret)
+    else:
+        n = len(kinds)
+        m = _vm_pad_len(n)
+        o, c = _vm_segred(op)(
+            _vm_i32_pad(kinds, n, m), _vm_i32_pad(vals, n, m),
+            np.int32(init), np.int32(acc), np.int32(group_open))
+        cnt = int(c)
+        packed = np.asarray(o)[:cnt].astype(_I64)
+        out_k, out_v = packed[:, 0], packed[:, 1]
+    return out_k, out_v, new_acc, new_open
+
+
+# ---- merge / zip run selection ----
+
+
+@jax.jit
+def _jnp_data_run(kinds):
+    return jnp.argmax(kinds != 0)
+
+
+def vm_data_run(kinds) -> int:
+    n = len(kinds)
+    if n == 0:
+        return 0
+    m = _vm_pad_len(n + 1)      # >= one sentinel slot: argmax needs a True
+    return min(int(_jnp_data_run(_vm_i32_pad(kinds, n, m, fill=1))), n)
+
+
+@jax.jit
+def _jnp_first_mismatch(stack):
+    mism = jnp.any(stack[1:] != stack[0:1], axis=0)
+    return jnp.where(jnp.any(mism), jnp.argmax(mism), stack.shape[1])
+
+
+def vm_first_mismatch(ref, others) -> int:
+    n = len(ref)
+    if not others or n == 0:
+        return n
+    m = _vm_pad_len(n)
+    stack = np.stack([_vm_i32_pad(a, n, m) for a in [ref] + list(others)])
+    return min(int(_jnp_first_mismatch(stack)), n)
+
+
 # -- hash probe -------------------------------------------------------------------
 
 VMEM_TABLE_LIMIT = 1 << 20  # entries; larger tables take the XLA gather path

@@ -1,0 +1,87 @@
+"""Dataflow-program serving — compiled Revet programs behind a request queue.
+
+``engine.py`` serves LLM token streams; this module serves *dataflow
+programs*: each request is one ``main()`` invocation of a compiled program
+(its own parameter tuple + DRAM image), and the engine drains the queue
+through a VectorVM whose lane-level hot loops run on a pluggable executor
+backend (core/backend.py, DESIGN.md §3). The compiled DFG and the backend
+instance are shared across requests — backends are stateless, so one Pallas
+jit cache serves the whole queue; only the VM (queues, DRAM, pools) is
+per-request state.
+
+Backend selection threads through ``CompileOptions(backend=...)`` exactly as
+in the apps/benchmarks layers, so a serving deployment flips one flag to move
+from the numpy oracle to the TPU kernel path.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from ..core.backend import ExecutorBackend, make_backend
+from ..core.compiler import CompileOptions, CompileResult, compile_program
+from ..core.vector_vm import VectorVM
+
+
+@dataclass
+class DataflowRequest:
+    rid: int
+    params: dict[str, int]
+    dram_init: Optional[dict[str, np.ndarray]] = None
+
+
+@dataclass
+class DataflowResponse:
+    rid: int
+    dram: dict[str, np.ndarray]
+    stats: collections.Counter
+    cycles: int
+    wall_s: float
+
+
+class DataflowEngine:
+    def __init__(self, prog, opts: CompileOptions | None = None,
+                 backend: str | ExecutorBackend | None = None,
+                 queue_cap: int = 1 << 16):
+        self.result: CompileResult = compile_program(prog, opts)
+        self.backend = make_backend(
+            backend if backend is not None else self.result.options.backend)
+        self.queue_cap = queue_cap
+        self.queue: collections.deque[DataflowRequest] = collections.deque()
+        self.done: list[DataflowResponse] = []
+        self.agg: collections.Counter = collections.Counter()
+
+    def submit(self, req: DataflowRequest) -> None:
+        self.queue.append(req)
+
+    def step(self) -> Optional[DataflowResponse]:
+        """Serve one queued request (one full program run)."""
+        if not self.queue:
+            return None
+        req = self.queue.popleft()
+        vm = VectorVM(self.result.dfg, req.dram_init,
+                      queue_cap=self.queue_cap, backend=self.backend)
+        t0 = time.perf_counter()
+        dram = vm.run(**req.params)
+        resp = DataflowResponse(req.rid, dram, vm.stats,
+                                vm.estimated_cycles(),
+                                time.perf_counter() - t0)
+        self.agg.update(vm.stats)
+        self.done.append(resp)
+        return resp
+
+    def drain(self) -> list[DataflowResponse]:
+        while self.queue:
+            self.step()
+        return self.done
+
+    def stats(self) -> dict:
+        return {"served": len(self.done),
+                "backend": self.backend.name,
+                "total_wall_s": sum(r.wall_s for r in self.done),
+                **{f"agg_{k}": v for k, v in self.agg.items()
+                   if isinstance(k, str)}}

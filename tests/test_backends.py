@@ -1,0 +1,286 @@
+"""Executor-backend equivalence (core/backend.py, DESIGN.md §3).
+
+The NumpyBackend is the TokenVM-validated oracle; the JaxBackend (routing
+the hot loops through kernels/ops.py) must be *bit-identical* to it — same
+DRAM outputs, same link-token stats — on every lane-level primitive and on
+every Table III app. The jnp route runs everywhere; the Pallas-kernel route
+(interpret mode on CPU) is exercised on the two cheapest apps.
+"""
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.apps.common import run_app
+from repro.core import ir
+from repro.core.backend import (JaxBackend, NumpyBackend, _scalar_red,
+                                make_backend, segment_reduce_window_np)
+from repro.core.compiler import CompileOptions, compile_program
+from repro.core.vector_vm import VectorVM
+
+
+@pytest.fixture(scope="module")
+def jax_jnp():
+    return JaxBackend(route="jnp")
+
+
+@pytest.fixture(scope="module")
+def jax_pallas():
+    return JaxBackend(route="pallas", interpret=True)
+
+
+NB = NumpyBackend()
+
+
+# ---------------------------------------------------------------------------
+# The numpy oracle itself: the vectorized segment reduction must match the
+# historical per-token loop it replaced.
+# ---------------------------------------------------------------------------
+
+def _loop_reduce(kinds, vals, op, init, acc, group_open):
+    """The original `_reduce_out` per-token loop — pinned here as the
+    semantic reference for the vectorized implementation."""
+    out_kinds, out_vals = [], []
+    for i in range(len(kinds)):
+        k = int(kinds[i])
+        if k == 0:
+            if vals is not None:
+                acc = _scalar_red(op, acc, int(vals[i]))
+            group_open = True
+        elif k == 1:
+            out_kinds.append(0)
+            out_vals.append(acc)
+            acc = init
+            group_open = False
+        else:
+            if group_open:
+                out_kinds.append(0)
+                out_vals.append(acc)
+                acc = init
+                group_open = False
+            out_kinds.append(k - 1)
+            out_vals.append(0)
+    return (np.array(out_kinds, np.int64), np.array(out_vals, np.int64),
+            acc, group_open)
+
+
+def _rand_window(rng, n, max_bar=3):
+    kinds = rng.choice([0, 0, 0, 1, 2, max_bar], size=n).astype(np.int64)
+    vals = rng.integers(-(1 << 31), 1 << 31, size=n).astype(np.int64)
+    return kinds, vals
+
+
+@pytest.mark.parametrize("op", ["add", "min", "max", "and", "or", "xor"])
+def test_vectorized_reduce_matches_loop(op):
+    rng = np.random.default_rng(7)
+    for trial in range(60):
+        n = int(rng.integers(0, 40))
+        kinds, vals = _rand_window(rng, n)
+        init = int(rng.integers(-4, 5))
+        acc = int(rng.integers(-(1 << 31), 1 << 31))
+        go = bool(rng.random() < 0.5)
+        ref = _loop_reduce(kinds, vals, op, init, acc, go)
+        got = segment_reduce_window_np(kinds, vals, op, init, acc, go)
+        np.testing.assert_array_equal(ref[0], got[0])
+        np.testing.assert_array_equal(ref[1], got[1])
+        assert ref[2:] == got[2:]
+
+
+def test_vectorized_reduce_no_values():
+    # reduce outputs with no payload: only the open/close protocol matters
+    ref = _loop_reduce(np.array([0, 1, 2, 1]), None, "add", 5, 5, False)
+    got = segment_reduce_window_np(np.array([0, 1, 2, 1]), None, "add",
+                                   5, 5, False)
+    np.testing.assert_array_equal(ref[0], got[0])
+    np.testing.assert_array_equal(ref[1], got[1])
+    assert ref[2:] == got[2:]
+
+
+def test_vectorized_reduce_wrap32():
+    # per-step wrap vs single wrap must agree on overflowing sums
+    kinds = np.zeros(5, np.int64)
+    kinds[-1] = 1
+    vals = np.full(5, (1 << 31) - 1, np.int64)
+    ref = _loop_reduce(kinds, vals, "add", 0, 0, False)
+    got = segment_reduce_window_np(kinds, vals, "add", 0, 0, False)
+    np.testing.assert_array_equal(ref[1], got[1])
+    assert ref[2] == got[2]
+
+
+# ---------------------------------------------------------------------------
+# Primitive-level equivalence: jax routes vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("route", ["jnp", "pallas"])
+def test_compact_equivalence(route, jax_jnp, jax_pallas):
+    jb = jax_jnp if route == "jnp" else jax_pallas
+    rng = np.random.default_rng(1)
+    trials = 40 if route == "jnp" else 6
+    for _ in range(trials):
+        n = int(rng.integers(1, 80))
+        kinds, _ = _rand_window(rng, n)
+        keep = rng.random(n) < 0.5
+        payload = rng.integers(-(1 << 31), 1 << 31, (n, 3)).astype(np.int64)
+        k1, p1 = NB.compact(keep, kinds, payload)
+        k2, p2 = jb.compact(keep, kinds, payload)
+        np.testing.assert_array_equal(k1, k2)
+        np.testing.assert_array_equal(p1, p2)
+        # payload-less windows (barrier-only routing)
+        k1, p1 = NB.compact(keep, kinds, None)
+        k2, p2 = jb.compact(keep, kinds, None)
+        np.testing.assert_array_equal(k1, k2)
+        assert p1 is None and p2 is None
+
+
+@pytest.mark.parametrize("route", ["jnp", "pallas"])
+def test_lower_barriers_equivalence(route, jax_jnp, jax_pallas):
+    jb = jax_jnp if route == "jnp" else jax_pallas
+    rng = np.random.default_rng(2)
+    trials = 40 if route == "jnp" else 6
+    for _ in range(trials):
+        n = int(rng.integers(1, 60))
+        kinds, _ = _rand_window(rng, n)
+        payload = rng.integers(-(1 << 31), 1 << 31, (n, 2)).astype(np.int64)
+        k1, p1 = NB.lower_barriers(kinds, payload)
+        k2, p2 = jb.lower_barriers(kinds, payload)
+        np.testing.assert_array_equal(k1, k2)
+        np.testing.assert_array_equal(p1, p2)
+
+
+@pytest.mark.parametrize("route,op", [("jnp", o) for o in
+                                      ("add", "min", "max", "xor")]
+                         + [("pallas", "add")])
+def test_segment_reduce_equivalence(route, op, jax_jnp, jax_pallas):
+    jb = jax_jnp if route == "jnp" else jax_pallas
+    rng = np.random.default_rng(3)
+    trials = 30 if route == "jnp" else 6
+    for _ in range(trials):
+        n = int(rng.integers(0, 50))
+        kinds, vals = _rand_window(rng, n)
+        init = int(rng.integers(-4, 5))
+        acc = int(rng.integers(-(1 << 31), 1 << 31))
+        go = bool(rng.random() < 0.5)
+        r1 = NB.segment_reduce(kinds, vals, op, init, acc, go)
+        r2 = jb.segment_reduce(kinds, vals, op, init, acc, go)
+        np.testing.assert_array_equal(r1[0], r2[0])
+        np.testing.assert_array_equal(r1[1], r2[1])
+        assert r1[2:] == r2[2:]
+
+
+def test_binop_equivalence(jax_jnp):
+    rng = np.random.default_rng(4)
+    tricky = np.array([0, 1, -1, 2, -2, 31, 32, (1 << 31) - 1, -(1 << 31),
+                       12345, -54321], np.int64)
+    for op in sorted(ir.BINOPS):
+        a = np.concatenate([tricky,
+                            rng.integers(-(1 << 31), 1 << 31, 50)])
+        b = np.concatenate([rng.permutation(tricky),
+                            rng.integers(-(1 << 31), 1 << 31, 50)])
+        np.testing.assert_array_equal(
+            NB.binop(op, a, b), jax_jnp.binop(op, a, b), err_msg=op)
+    c = rng.integers(0, 2, 30).astype(np.int64)
+    a = rng.integers(-(1 << 31), 1 << 31, 30)
+    b = rng.integers(-(1 << 31), 1 << 31, 30)
+    np.testing.assert_array_equal(NB.select(c, a, b),
+                                  jax_jnp.select(c, a, b))
+    np.testing.assert_array_equal(NB.neg(a), jax_jnp.neg(a))
+    np.testing.assert_array_equal(NB.logical_not(c), jax_jnp.logical_not(c))
+
+
+def test_run_selection_equivalence(jax_jnp):
+    rng = np.random.default_rng(5)
+    for _ in range(60):
+        n = int(rng.integers(0, 40))
+        kinds, _ = _rand_window(rng, n)
+        assert NB.data_run(kinds) == jax_jnp.data_run(kinds)
+    # all-data windows at power-of-two lengths (the argmax edge case)
+    for n in (1, 2, 4, 8, 16, 128):
+        kinds = np.zeros(n, np.int64)
+        assert NB.data_run(kinds) == jax_jnp.data_run(kinds) == n
+    for _ in range(40):
+        n = int(rng.integers(1, 24))
+        ref = rng.choice([0, 1, 2], size=n).astype(np.int64)
+        others = [ref.copy(), ref.copy()]
+        if rng.random() < 0.7:
+            others[int(rng.integers(0, 2))][int(rng.integers(0, n))] += 1
+        assert NB.first_mismatch(ref, others) == \
+            jax_jnp.first_mismatch(ref, others)
+
+
+# ---------------------------------------------------------------------------
+# Whole-program equivalence: every app, bit-identical outputs AND stats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_app_backend_equivalence(name, jax_jnp):
+    app = ALL_APPS[name]()
+    res = compile_program(app.prog)
+    vm_np = VectorVM(res.dfg, app.dram_init, backend="numpy")
+    out_np = vm_np.run(**app.params)
+    vm_jx = VectorVM(res.dfg, app.dram_init, backend=jax_jnp)
+    out_jx = vm_jx.run(**app.params)
+    for k in out_np:
+        np.testing.assert_array_equal(out_np[k], out_jx[k],
+                                      err_msg=f"{name}: dram '{k}'")
+    assert vm_np.stats == vm_jx.stats, \
+        f"{name}: stats diverged between backends"
+    for dram, want in app.expected.items():
+        np.testing.assert_array_equal(np.asarray(out_jx[dram])[:len(want)],
+                                      want)
+
+
+@pytest.mark.parametrize("name", ["hash_table", "murmur3"])
+def test_app_backend_equivalence_pallas(name, jax_pallas):
+    """Full Pallas-kernel route (interpret mode) on the two cheapest apps."""
+    app = ALL_APPS[name]()
+    res = compile_program(app.prog)
+    vm_np = VectorVM(res.dfg, app.dram_init, backend="numpy")
+    out_np = vm_np.run(**app.params)
+    vm_px = VectorVM(res.dfg, app.dram_init, backend=jax_pallas)
+    out_px = vm_px.run(**app.params)
+    for k in out_np:
+        np.testing.assert_array_equal(out_np[k], out_px[k],
+                                      err_msg=f"{name}: dram '{k}'")
+    assert vm_np.stats == vm_px.stats
+
+
+# ---------------------------------------------------------------------------
+# Backend threading through the compile/apps/serve layers
+# ---------------------------------------------------------------------------
+
+def test_compile_options_backend_threading(jax_jnp):
+    app = ALL_APPS["strlen"]()
+    res, vm, out = run_app(app, CompileOptions(backend="jax"),
+                           backend=jax_jnp)   # instance avoids re-warmup
+    assert vm.backend is jax_jnp
+    _, vm2, _ = run_app(app)                  # defaults to numpy oracle
+    assert vm2.backend.name == "numpy"
+    assert res.options.backend == "jax"
+
+
+def test_make_backend_specs():
+    assert make_backend(None).name == "numpy"
+    assert make_backend("numpy").name == "numpy"
+    be = NumpyBackend()
+    assert make_backend(be) is be
+    with pytest.raises(ValueError):
+        make_backend("no-such-backend")
+
+
+def test_dataflow_engine_serves_per_backend(jax_jnp):
+    from repro.serve.dataflow import DataflowEngine, DataflowRequest
+    app = ALL_APPS["strlen"]()
+    outs = {}
+    for be in ("numpy", jax_jnp):
+        eng = DataflowEngine(app.prog, backend=be)
+        for rid in range(3):
+            eng.submit(DataflowRequest(rid, app.params, app.dram_init))
+        resps = eng.drain()
+        assert len(resps) == 3 and eng.stats()["served"] == 3
+        outs[eng.backend.name] = resps[0].dram
+        for r in resps:
+            for dram, want in app.expected.items():
+                np.testing.assert_array_equal(
+                    np.asarray(r.dram[dram])[:len(want)], want)
+    a, b = outs.values()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])

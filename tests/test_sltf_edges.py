@@ -1,0 +1,143 @@
+"""Deterministic SLTF codec edge cases (paper §III-A).
+
+test_sltf.py covers these regions with hypothesis property tests; this module
+pins the tricky corners — empty streams, deep barrier cascades, implied-Ω1
+round-trips — with explicit cases so they run even where hypothesis is
+unavailable (see tests/conftest.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import sltf
+from repro.core.sltf import Tok, bar, data_tok
+
+
+# ---------------------------------------------------------------------------
+# Empty streams: [] vs [[]] vs [[], []] at every depth
+# ---------------------------------------------------------------------------
+
+def test_empty_encodings_depth2():
+    assert sltf.encode_ragged([], 2) == [bar(2)]
+    assert sltf.encode_ragged([[]], 2) == [bar(1), bar(2)]
+    assert sltf.encode_ragged([[], []], 2) == [bar(1), bar(1), bar(2)]
+
+
+def test_empty_encodings_depth3():
+    assert sltf.encode_ragged([], 3) == [bar(3)]
+    assert sltf.encode_ragged([[]], 3) == [bar(2), bar(3)]
+    # the trailing Ω2 of the non-empty outer group is implied by Ω3
+    assert sltf.encode_ragged([[[]]], 3) == [bar(1), bar(3)]
+    assert sltf.encode_ragged([[[1]], [[]]], 3) == \
+        [data_tok(1), bar(2), bar(1), bar(3)]
+
+
+@pytest.mark.parametrize("x,ndim", [
+    ([], 1), ([], 2), ([], 4),
+    ([[]], 2), ([[], []], 2), ([[], [], []], 2),
+    ([[[]]], 3), ([[], [[]]], 3), ([[[]], []], 3),
+])
+def test_empty_roundtrips(x, ndim):
+    toks = sltf.encode_ragged(x, ndim)
+    assert sltf.decode_ragged(toks, ndim) == [x]
+
+
+def test_empty_stream_decodes_to_nothing():
+    assert sltf.decode_ragged([], 2) == []
+
+
+# ---------------------------------------------------------------------------
+# Implied-Ω1 law: a higher barrier closes non-empty inner groups
+# ---------------------------------------------------------------------------
+
+def test_implied_omega1_encoding():
+    # trailing non-empty inner group: its Ω1 is implied by Ω2
+    assert sltf.encode_ragged([[0, 1], [2]], 2) == \
+        [data_tok(0), data_tok(1), bar(1), data_tok(2), bar(2)]
+    # but an empty trailing group keeps its explicit Ω1
+    assert sltf.encode_ragged([[0], []], 2) == \
+        [data_tok(0), bar(1), bar(1), bar(2)]
+
+
+def test_implied_omega1_roundtrip_depth3():
+    x = [[[1, 2], [3]], [[4]]]
+    toks = sltf.encode_ragged(x, 3)
+    # the canonical stream implies both the inner Ω1 and the middle Ω2
+    assert toks == [data_tok(1), data_tok(2), bar(1), data_tok(3), bar(2),
+                    data_tok(4), bar(3)]
+    assert sltf.decode_ragged(toks, 3) == [x]
+
+
+def test_decoder_cascades_only_nonempty_groups():
+    # Ω2 alone (depth 2): no implied inner group — decodes to []
+    assert sltf.decode_ragged([bar(2)], 2) == [[]]
+    # data then Ω2: implied Ω1 closes the open group
+    assert sltf.decode_ragged([data_tok(7), bar(2)], 2) == [[[7]]]
+
+
+# ---------------------------------------------------------------------------
+# Deep barrier cascades
+# ---------------------------------------------------------------------------
+
+def test_deep_cascade_roundtrip():
+    # one scalar at depth 5: a single Ω5 must cascade through all open dims
+    x = [[[[[9]]]]]
+    toks = sltf.encode_ragged(x, 5)
+    assert toks == [data_tok(9), bar(5)]
+    assert sltf.decode_ragged(toks, 5) == [x]
+
+
+def test_deep_cascade_mixed_depths():
+    x = [[[[1]], []], [[[2], []]]]
+    toks = sltf.encode_ragged(x, 4)
+    assert sltf.decode_ragged(toks, 4) == [x]
+
+
+def test_deep_cascade_barrier_counts():
+    # exactly one top barrier per tensor, at any depth
+    for d in range(1, 6):
+        x: list = []
+        for _ in range(d - 1):
+            x = [x]
+        toks = sltf.encode_ragged(x, d)
+        assert sum(1 for t in toks if t.level == d) == 1
+
+
+def test_overdeep_barrier_rejected():
+    with pytest.raises(ValueError):
+        sltf.decode_ragged([bar(4)], ndim=3)
+    with pytest.raises(ValueError):
+        sltf.validate_stream([data_tok(1), bar(3)], ndim=2)
+
+
+def test_shift_barriers_floor():
+    toks = [data_tok(1), bar(1), bar(2)]
+    up = sltf.shift_barriers(toks, +1)
+    assert up == [data_tok(1), bar(2), bar(3)]
+    assert sltf.shift_barriers(up, -1) == toks
+    with pytest.raises(ValueError):
+        sltf.shift_barriers(toks, -1)   # Ω1 would drop below 1
+
+
+# ---------------------------------------------------------------------------
+# Array form round-trips (the dense encoding the VectorVM backends use)
+# ---------------------------------------------------------------------------
+
+def test_array_roundtrip_empty_groups():
+    toks = sltf.encode_ragged([[], [1], []], 2)
+    arr = sltf.tokens_to_arrays(toks, n_vars=1)
+    assert list(arr.kinds[:arr.length]) == [t.level for t in toks]
+    assert sltf.arrays_to_tokens(arr) == toks
+
+
+def test_array_roundtrip_multivar():
+    toks = [Tok(0, (1, 2)), Tok(0, (3, 4)), bar(1), bar(2)]
+    arr = sltf.tokens_to_arrays(toks, n_vars=2, capacity=8)
+    assert arr.capacity == 8 and arr.length == 4
+    assert sltf.arrays_to_tokens(arr) == toks
+
+
+def test_array_capacity_and_arity_checks():
+    with pytest.raises(ValueError):
+        sltf.tokens_to_arrays([data_tok(1)] * 3, n_vars=1, capacity=2)
+    with pytest.raises(ValueError):
+        sltf.tokens_to_arrays([data_tok(1, 2)], n_vars=1)
