@@ -1,0 +1,79 @@
+"""``repro.api`` front-end benchmarks.
+
+``api_dispatch`` measures what the jit-style front-end costs per call once
+the compile cache is warm: the same app run (a) directly — one pre-built
+``CompileResult`` + a fresh ``VectorVM`` per call, the pre-redesign
+hot path — and (b) through the decorated function's cached call path
+(argument binding + cache key + lookup + execute).  The difference is the
+API dispatch overhead, amortized against the cold-compile cost the cache
+saves.  Results land in ``BENCH_api.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.apps import ALL_APPS
+from repro.core.compiler import compile_program
+from repro.core.vector_vm import VectorVM
+
+from .common import best_of
+
+BENCH_JSON = "BENCH_api.json"
+_APPS = ("murmur3", "hash_table")  # cheap apps: dispatch cost is visible
+_CALLS = 20
+
+
+def _best_wall(fn, reps: int) -> float:
+    return best_of(fn, reps)[1]
+
+
+def api_dispatch(rows: list[dict], out_path: str = BENCH_JSON) -> None:
+    payload: dict[str, dict] = {}
+    for name in _APPS:
+        app = ALL_APPS[name]()
+        fn = app.fn
+        fn.clear_cache()
+
+        # cold path: what one compile-cache miss costs (trace + passes +
+        # dataflow lowering + backend bind, no execution)
+        t0 = time.perf_counter()
+        fn.lower(**app.dram_init, **app.params, **app.statics).compile()
+        cold_s = time.perf_counter() - t0
+        assert fn.cache_info().misses == 1
+
+        # direct path: pre-compiled result, fresh VM per call
+        res = compile_program(app.prog)
+
+        def direct():
+            VectorVM(res.dfg, app.dram_init).run(**app.params)
+
+        def api_call():
+            fn(**app.dram_init, **app.params, **app.statics)
+
+        direct_s = _best_wall(direct, _CALLS)
+        api_s = _best_wall(api_call, _CALLS)
+        ci = fn.cache_info()
+        assert ci.misses == 1 and ci.hits >= _CALLS, \
+            f"{name}: cached calls recompiled ({ci})"
+
+        cell = {
+            "direct_us": round(direct_s * 1e6, 1),
+            "cached_api_us": round(api_s * 1e6, 1),
+            "dispatch_overhead_us": round((api_s - direct_s) * 1e6, 1),
+            "cold_compile_ms": round(cold_s * 1e3, 2),
+            "calls_per_compile_breakeven": round(
+                cold_s / max(api_s, 1e-9), 1),
+            "cache": dict(zip(("hits", "misses", "currsize"), ci)),
+        }
+        payload[name] = cell
+        rows.append({"bench": "api", "name": name, **cell})
+
+    with open(out_path, "w") as f:
+        json.dump({
+            "meta": {"note": "per-call wall time, best of "
+                             f"{_CALLS}; overhead = cached API call minus "
+                             "direct pre-compiled VectorVM run"},
+            "apps": payload,
+        }, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -12,21 +12,20 @@
 from __future__ import annotations
 
 import json
-import time
 
 import numpy as np
 
 from repro.apps import ALL_APPS
 from repro.apps.common import run_app
-from repro.core.backend import (JaxBackend, _scalar_red,
+from repro.core.backend import (JaxBackend, segment_reduce_reference,
                                 segment_reduce_window_np)
 
 BENCH_JSON = "BENCH_vectorvm.json"
 
 
 def _timed_run(app, backend):
-    _, vm, out = run_app(app, backend=backend)
-    return out, vm, vm.run_wall_s
+    r = run_app(app, backend=backend)
+    return r.dram, r.vm, r.report.wall_s
 
 
 def vectorvm_backends(rows: list[dict], out_path: str = BENCH_JSON) -> None:
@@ -70,30 +69,9 @@ def vectorvm_backends(rows: list[dict], out_path: str = BENCH_JSON) -> None:
 # -- _reduce_out vectorization micro-benchmark --------------------------------
 
 
-def _legacy_reduce_loop(kinds, vals, op, init, acc, group_open):
-    """The pre-backend per-token `_reduce_out` loop (kept as the baseline)."""
-    out_kinds, out_vals = [], []
-    for i in range(len(kinds)):
-        k = int(kinds[i])
-        if k == 0:
-            if vals is not None:
-                acc = _scalar_red(op, acc, int(vals[i]))
-            group_open = True
-        elif k == 1:
-            out_kinds.append(0)
-            out_vals.append(acc)
-            acc = init
-            group_open = False
-        else:
-            if group_open:
-                out_kinds.append(0)
-                out_vals.append(acc)
-                acc = init
-                group_open = False
-            out_kinds.append(k - 1)
-            out_vals.append(0)
-    return (np.array(out_kinds, np.int64), np.array(out_vals, np.int64),
-            acc, group_open)
+# the pre-backend per-token `_reduce_out` loop, kept canonically in
+# core/backend.py as the timing baseline + semantic reference
+_legacy_reduce_loop = segment_reduce_reference
 
 
 def _synth_stream(n: int, seed: int = 0):
@@ -103,13 +81,7 @@ def _synth_stream(n: int, seed: int = 0):
     return kinds, vals
 
 
-def _best_of(fn, reps: int = 3):
-    best, out = float("inf"), None
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        out = fn()
-        best = min(best, time.perf_counter() - t0)
-    return out, best
+from .common import best_of as _best_of
 
 
 def reduce_micro(rows: list[dict]) -> None:

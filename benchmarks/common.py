@@ -30,6 +30,17 @@ def build_bench_app(name: str):
     return ALL_APPS[name](**BENCH_SIZES.get(name, {}))
 
 
+def best_of(fn, reps: int = 3):
+    """Run ``fn`` ``reps`` times; return (last result, best wall seconds)."""
+    import time
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
 def run_vector_vm(app, opts: CompileOptions | None = None,
                   check: bool = True, backend=None, **vm_kw):
     """Compile + run one app, timed. ``backend`` overrides ``opts.backend``
@@ -37,8 +48,8 @@ def run_vector_vm(app, opts: CompileOptions | None = None,
     delegate to apps.common.run_app so backend threading and result checking
     live in one place."""
     from repro.apps.common import run_app
-    res, vm, _ = run_app(app, opts, backend=backend, check=check, **vm_kw)
-    return res, vm, vm.run_wall_s
+    r = run_app(app, opts, backend=backend, check=check, **vm_kw)
+    return r.result, r.vm, r.report.wall_s
 
 
 def simt_cost(app) -> dict:

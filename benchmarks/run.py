@@ -4,6 +4,8 @@ the executor-backend suite.
     PYTHONPATH=src python -m benchmarks.run [--only table5]
     PYTHONPATH=src python -m benchmarks.run --only vectorvm   # writes
         BENCH_vectorvm.json (per-app numpy vs jax backend timings)
+    PYTHONPATH=src python -m benchmarks.run --only api        # writes
+        BENCH_api.json (front-end dispatch overhead vs direct VectorVM)
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark cell.
 """
@@ -18,11 +20,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table4,table5,fig12,fig13,"
-                         "fig14,roofline,vectorvm,micro")
+                         "fig14,roofline,vectorvm,micro,api")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import backends, figures, roofline, tables
+    from . import api_bench, backends, figures, roofline, tables
     benches = {
         "table3": tables.table3_apps,
         "table4": tables.table4_resources,
@@ -33,6 +35,7 @@ def main() -> None:
         "roofline": roofline.roofline_rows,
         "vectorvm": backends.vectorvm_backends,
         "micro": backends.reduce_micro,
+        "api": api_bench.api_dispatch,
     }
     if only:
         unknown = only - set(benches)

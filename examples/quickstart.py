@@ -1,37 +1,36 @@
-"""Quickstart: write a Revet program, compile it to dataflow, run it on all
-three executors, and map it onto the vRDA machine model.
+"""Quickstart: write a Revet program against the jit-style ``revet`` API,
+call it array-in/array-out, cross-check all three executors, and map it onto
+the vRDA machine model.
 
     PYTHONPATH=src python examples/quickstart.py
 
 The program is the paper's running example (Fig. 7): parallel strlen with a
 demand-fetched read iterator inside a data-dependent while loop — the shape
-of code MapReduce/Spatial cannot express (§I).
+of code MapReduce/Spatial cannot express (§I).  The ``@revet.program``
+decorator hides the raw builder wiring (DRAM declarations, ``compile_program``,
+``VectorVM``): array sizes and dtypes are inferred from the call arguments,
+and each distinct shape signature compiles exactly once into a cached
+``CompiledProgram``.
 """
 import numpy as np
 
-from repro.core.compiler import CompileOptions, compile_program
-from repro.core.golden import Golden
-from repro.core.lang import Prog
+import revet
 from repro.core.machine import MachineParams, map_graph, scale_outer_parallelism
-from repro.core.token_vm import TokenVM
-from repro.core.vector_vm import VectorVM
 
 
-def build_strlen(n_strings, blob_len):
-    p = Prog("strlen")
-    p.dram("input", blob_len, "i8")
-    p.dram("offsets", n_strings)
-    p.dram("lengths", n_strings)
-    with p.main("count") as (m, count):
-        with m.foreach(count) as (b, i):            # threads (§IV-A)
-            off = b.let(b.dram_load("offsets", i))
-            n = b.let(0, "len")
-            it = b.read_it("input", off, tile=16)   # demand-fetched (Fig. 5)
-            with b.while_(lambda h: h.deref(it) != 0) as w:
-                w.set(n, n + 1)
-                w.advance(it)
-            b.dram_store("lengths", i, n)
-    return p
+@revet.program(outputs={"lengths": "offsets"})
+def strlen(b, input, offsets, lengths, *, count):
+    """Traced once per shape signature: ``b`` is the program's main Block;
+    ``input``/``offsets``/``lengths`` are DRAM array handles; ``count`` is a
+    runtime scalar parameter."""
+    with b.foreach(count) as (t, i):                # threads (§IV-A)
+        off = t.let(t.dram_load(offsets, i))
+        n = t.let(0, "len")
+        it = t.read_it(input, off, tile=16)         # demand-fetched (Fig. 5)
+        with t.while_(lambda h: h.deref(it) != 0) as w:
+            w.set(n, n + 1)
+            w.advance(it)
+        t.dram_store(lengths, i, n)
 
 
 def main():
@@ -40,48 +39,59 @@ def main():
     for s in strings:
         offs.append(len(blob))
         blob += s + b"\0"
-    data = {"input": np.frombuffer(bytes(blob), np.uint8),
-            "offsets": np.array(offs)}
-    p = build_strlen(len(strings), len(blob) + 16)
+    data = np.frombuffer(bytes(blob) + b"\0" * 16, np.uint8)  # iter padding
+    offs = np.array(offs)
+    expected = [len(s) for s in strings]
 
-    # 1. language-semantics oracle
-    golden = Golden(p.ir, data).run(count=len(strings))
-    print("golden lengths:   ", list(golden["lengths"]))
+    # 1. arrays in, arrays out — compiles on first call, cached after
+    lengths = strlen(data, offs, count=len(strings))
+    print("lengths:          ", list(lengths))
+    strlen(data, offs, count=len(strings))          # same shapes: cache hit
+    print("compile cache:    ", strlen.cache_info())
 
-    # 2. compile: passes (§V-A/B) + CFG->dataflow lowering (§V-C)
-    res = compile_program(p)
-    print("dataflow graph:   ", res.dfg.stats())
+    # 2. AOT staging, mirroring jax.jit(f).lower().compile()
+    traced = strlen.trace(revet.spec(data.size, "i8"), revet.spec(offs.size),
+                          count=len(strings))
+    lowered = traced.lower(revet.CompileOptions())
+    compiled = lowered.compile()                    # lands in strlen's cache
+    print("dataflow graph:   ", compiled.result.dfg.stats())
 
-    # 3. token-level reference executor (machine semantics, §III)
-    tok = TokenVM(res.dfg, data).run(count=len(strings))
-    print("TokenVM lengths:  ", list(tok["lengths"]))
-
-    # 4. vectorized executor (the TPU execution model: compaction + merging)
-    vm = VectorVM(res.dfg, data)
-    vec = vm.run(count=len(strings))
-    print("VectorVM lengths: ", list(vec["lengths"]))
-    print(f"lane occupancy:    {vm.lane_occupancy():.3f} "
+    # 3. cross-check every executor on the same arrays (DESIGN.md §5):
+    #    the golden language oracle, the token-level reference machine, and
+    #    the vectorized TPU-model executor
+    golden = strlen.run_on(data, offs, count=len(strings), executor="golden")
+    token = strlen.run_on(data, offs, count=len(strings), executor="token")
+    vector = strlen.run_on(data, offs, count=len(strings), executor="vector")
+    print("golden lengths:   ", list(golden.outputs[0]))
+    print("TokenVM lengths:  ", list(token.outputs[0]))
+    print("VectorVM lengths: ", list(vector.outputs[0]))
+    print(f"lane occupancy:    {vector.report.lane_occupancy:.3f} "
           "(dense under divergence — the dataflow-threads claim)")
 
-    # 4b. same program, hot loops routed through the Pallas kernel layer
-    # (CompileOptions(backend="jax"): XLA on CPU hosts, real kernels on TPU;
-    # bit-identical outputs and link-token stats — see DESIGN.md §3)
-    res_jax = compile_program(p, CompileOptions(backend="jax"))
-    vm_jax = VectorVM(res_jax.dfg, data, backend=res_jax.options.backend)
-    vec_jax = vm_jax.run(count=len(strings))
-    assert all(np.array_equal(vec[k], vec_jax[k]) for k in vec)
-    assert vm.stats == vm_jax.stats
-    print(f"jax backend:       {vm_jax.backend.name} — bit-identical")
+    # 3b. same program, hot loops routed through the Pallas kernel layer
+    # (backend="jax": XLA on CPU hosts, real kernels on TPU; bit-identical
+    # outputs and link-token stats — see DESIGN.md §3)
+    jax_run = strlen.run(data, offs, count=len(strings), backend="jax")
+    assert all(np.array_equal(vector.dram[k], jax_run.dram[k])
+               for k in vector.dram)
+    assert vector.report.stats == jax_run.report.stats
+    print(f"jax backend:       {jax_run.report.backend} — bit-identical")
 
-    # 5. map to the physical vRDA (Table II/IV)
-    rep = map_graph(res.dfg, res.widths, MachineParams())
+    # 4. map to the physical vRDA (Table II/IV)
+    rep = map_graph(compiled.result.dfg, compiled.result.widths,
+                    MachineParams())
     scale = scale_outer_parallelism(rep)
     print("machine mapping:  ", rep.totals())
     print("outer parallelism:", scale)
 
-    expected = [len(s) for s in strings]
-    assert list(vec["lengths"]) == expected == list(tok["lengths"])
-    print("OK — all three executors agree with Python semantics")
+    assert list(lengths) == expected
+    assert list(golden.outputs[0]) == list(token.outputs[0]) == expected
+    assert list(vector.outputs[0]) == expected
+    ci = strlen.cache_info()
+    assert ci.misses == 2, \
+        f"expected one compile per (shape, backend) pair, got {ci}"
+    print("OK — all three executors agree with Python semantics; "
+          f"2 compiles (numpy+jax) served {ci.hits + ci.misses} calls")
 
 
 if __name__ == "__main__":

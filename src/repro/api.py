@@ -1,0 +1,667 @@
+"""``revet.api`` — the jit-style array-in/array-out front-end.
+
+The raw toolchain (``lang.Prog`` → DRAM size declarations →
+``compiler.compile_program`` → ``vector_vm.VectorVM``) is a builder, not an
+API: every caller re-wires the Fig. 8 pipeline and recompiles per run.  This
+module is the one idiomatic entry point, shaped like ``jax.jit``:
+
+    import revet
+
+    @revet.program(outputs={"lengths": "offsets"})
+    def strlen(b, input, offsets, lengths, *, count):
+        with b.foreach(count) as (t, i):
+            off = t.let(t.dram_load(offsets, i))
+            n = t.let(0, "len")
+            it = t.read_it(input, off, tile=16)
+            with t.while_(lambda h: h.deref(it) != 0) as w:
+                w.set(n, n + 1)
+                w.advance(it)
+            t.dram_store(lengths, i, n)
+
+    lengths = strlen(blob, offs, count=n)        # arrays in, arrays out
+
+The decorated function is a *tracer*: it receives the program's main
+:class:`~repro.core.lang.Block` plus one string-like handle per DRAM array
+(usable anywhere the builder expects an array name), and keyword-only
+parameters become ``main()`` scalar parameters (runtime values) unless listed
+in ``statics=`` (trace-time Python constants, baked into the program).
+
+At call time real numpy arrays are passed positionally (or by name); DRAM
+declarations — names, sizes, dtypes — are inferred from the arguments,
+output arrays are declared from the ``outputs=`` spec and returned as arrays.
+Each distinct (shapes, dtypes, statics, resolved output sizes,
+CompileOptions, backend) signature compiles once into a
+:class:`CompiledProgram` — which holds the DFG, the post-pass IR, subword
+widths, and a live :class:`~repro.core.backend.ExecutorBackend` instance, so
+one Pallas jit cache serves every invocation — and lands in a per-function
+compile cache with ``cache_info()`` / ``clear_cache()``.
+
+AOT staging mirrors ``jax.jit(f).lower().compile()``:
+
+    traced   = strlen.trace(spec_or_array, offs, count=n)   # lang.Prog built
+    lowered  = traced.lower(CompileOptions(...))             # passes + DFG
+    compiled = lowered.compile(backend="jax")                # backend bound
+
+``CompiledProgram.run_on(executor=...)`` is the cross-checking escape hatch:
+the same arrays run through the Golden language oracle, the token-level
+reference executor, or the vectorized VM (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import inspect
+import math
+import time
+import weakref
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from .core.backend import ExecutorBackend, make_backend
+from .core.compiler import CompileOptions, CompileResult, compile_program
+from .core.golden import Golden
+from .core.lang import Prog
+from .core.token_vm import TokenVM
+from .core.vector_vm import VectorVM
+
+__all__ = [
+    "ArraySpec", "CacheInfo", "CompiledProgram", "Execution", "Lowered",
+    "ProgramFn", "RunReport", "Traced", "cache_info", "clear_cache",
+    "compile", "lower", "program", "spec", "trace",
+]
+
+# call-time keyword names claimed by the API itself (never scalar params)
+_RESERVED_KWARGS = ("options", "backend", "executor", "vm_kwargs")
+
+_NP_DTYPE = {1: "i8", 2: "i16"}  # itemsize -> DRAM dtype ("i32" otherwise)
+
+
+# ---------------------------------------------------------------------------
+# Array specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArraySpec:
+    """Abstract array value — shape + DRAM dtype — for data-free tracing
+    (the analogue of ``jax.ShapeDtypeStruct``)."""
+    shape: tuple[int, ...]
+    dtype: str = "i32"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+def spec(shape: Union[int, Sequence[int]], dtype: str = "i32") -> ArraySpec:
+    """Build an :class:`ArraySpec` (``revet.spec(1024)``,
+    ``revet.spec((8, 16), "i8")``)."""
+    if isinstance(shape, (int, np.integer)):
+        shape = (int(shape),)
+    return ArraySpec(tuple(int(s) for s in shape), dtype)
+
+
+def _abstractify(x) -> ArraySpec:
+    if isinstance(x, ArraySpec):
+        return x
+    arr = np.asarray(x)
+    if arr.dtype.kind not in "iub":
+        raise TypeError(
+            f"revet programs take integer arrays, got dtype {arr.dtype}")
+    return ArraySpec(arr.shape, _NP_DTYPE.get(arr.dtype.itemsize, "i32"))
+
+
+class _DramHandle(str):
+    """Array handle passed to the traced function.  It *is* the DRAM array
+    name, so it drops into every ``Block`` builder method unchanged."""
+    __slots__ = ()
+
+
+_BACKEND_TOKENS: dict[str, tuple] = {}   # spec string -> resolved config
+
+
+def _backend_token(backend, options: CompileOptions) -> tuple:
+    """Cache-key token for a backend spec.  Backends are stateless
+    (DESIGN.md §3), so both instances and name specs key by resolved
+    *configuration* — ``backend="jax"`` and ``backend=JaxBackend()`` share
+    one compile-cache entry."""
+    def config(be: ExecutorBackend) -> tuple:
+        return ("backend", type(be).__qualname__, be.name,
+                getattr(be, "interpret", None))
+
+    if isinstance(backend, ExecutorBackend):
+        return config(backend)
+    spec = backend if backend is not None else options.backend
+    tok = _BACKEND_TOKENS.get(spec)
+    if tok is None:
+        tok = _BACKEND_TOKENS[spec] = config(make_backend(spec))
+    return tok
+
+
+def _bind_call(name: str, in_names: Sequence[str], args: tuple, kwargs: dict,
+               *, scalar_names: Sequence[str] = (),
+               static_names: Sequence[str] = (),
+               defaults: dict | None = None
+               ) -> tuple[dict, dict[str, int], dict[str, Any]]:
+    """Split call arguments into (input arrays, scalar params, statics) —
+    shared by the decorated-function and ``CompiledProgram`` entry points."""
+    defaults = defaults or {}
+    if len(args) > len(in_names):
+        raise TypeError(f"{name}: takes {len(in_names)} input arrays "
+                        f"({', '.join(in_names)}), got {len(args)} "
+                        "positional arguments")
+    arrays = dict(zip(in_names, args))
+    scalars: dict[str, int] = {}
+    statics: dict[str, Any] = {}
+    for k, v in kwargs.items():
+        if k in in_names:
+            if k in arrays:
+                raise TypeError(f"{name}: got multiple values for input "
+                                f"array '{k}'")
+            arrays[k] = v
+        elif k in static_names:
+            statics[k] = v
+        elif k in scalar_names:
+            scalars[k] = v
+        else:
+            raise TypeError(f"{name}: unexpected keyword '{k}'")
+    for n in static_names:
+        if n not in statics:
+            if n not in defaults:
+                raise TypeError(f"{name}: missing static '{n}'")
+            statics[n] = defaults[n]
+    for n in scalar_names:
+        if n not in scalars:
+            if n not in defaults:
+                raise TypeError(f"{name}: missing scalar param '{n}'")
+            scalars[n] = defaults[n]
+    missing = set(in_names) - set(arrays)
+    if missing:
+        raise TypeError(f"{name}: missing input array(s) {sorted(missing)}")
+    return arrays, scalars, statics
+
+
+# ---------------------------------------------------------------------------
+# Run reports
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunReport:
+    """Structured account of one executed program run (replaces the historic
+    ``vm.run_wall_s`` attribute injection)."""
+    executor: str                       # "vector" | "token" | "golden"
+    backend: Optional[str]              # executor backend name (vector only)
+    wall_s: float                       # the run() call only, no compile
+    stats: collections.Counter
+    cycles: int                         # cost-model estimate (vector only)
+    lane_occupancy: float               # useful/issued lanes (vector only)
+    cache_hit: Optional[bool] = None    # compile-cache outcome of this call
+
+
+@dataclass
+class Execution:
+    """Everything one call produced: output arrays, the full DRAM image, the
+    executor instance, and the :class:`RunReport`."""
+    outputs: tuple[np.ndarray, ...]
+    dram: dict[str, np.ndarray]
+    report: RunReport
+    vm: Any                             # VectorVM | TokenVM | Golden
+    compiled: "CompiledProgram"
+
+    @property
+    def result(self) -> CompileResult:
+        return self.compiled.result
+
+    def unpacked(self):
+        return self.outputs[0] if len(self.outputs) == 1 else self.outputs
+
+
+CacheInfo = collections.namedtuple("CacheInfo", "hits misses currsize")
+
+
+# ---------------------------------------------------------------------------
+# AOT stages
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Traced:
+    """Stage 1: shapes bound, language traced to a ``lang.Prog``."""
+    owner: "ProgramFn"
+    prog: Prog
+    in_specs: dict[str, ArraySpec]
+    out_info: tuple[tuple[str, int, str], ...]   # (name, size, dtype)
+    statics: dict[str, Any]
+
+    def lower(self, options: CompileOptions | None = None) -> "Lowered":
+        options = options or self.owner.options or CompileOptions()
+        return Lowered(self, options, compile_program(self.prog, options))
+
+
+@dataclass
+class Lowered:
+    """Stage 2: optimization passes run, CFG lowered to the dataflow graph."""
+    traced: Traced
+    options: CompileOptions
+    result: CompileResult
+
+    def compile(self, backend: str | ExecutorBackend | None = None
+                ) -> "CompiledProgram":
+        """Stage 3: bind an executor backend; lands in the owner's cache so
+        subsequent same-shape calls of the decorated function hit it."""
+        owner = self.traced.owner
+        be = backend if backend is not None else \
+            (owner.backend if owner.backend is not None
+             else self.options.backend)
+        key = owner._make_key(self.traced.in_specs, self.traced.out_info,
+                              self.traced.statics, self.options, be)
+        cached = owner._cache_get(key)
+        if cached is not None:
+            return cached
+        return owner._cache_put(key, self.result, be, self.traced.in_specs,
+                                self.traced.out_info,
+                                source_ir=self.traced.prog.ir)
+
+
+@dataclass
+class CompiledProgram:
+    """A shape-specialized executable program: DFG + post-pass IR + subword
+    widths (inside ``result``) and a live backend instance.  One of these per
+    cache entry; construct VMs per call (VM state is per-request)."""
+    name: str
+    result: CompileResult
+    backend: ExecutorBackend
+    in_specs: dict[str, ArraySpec]
+    out_info: tuple[tuple[str, int, str], ...]
+    scalar_names: tuple[str, ...]
+    in_names: tuple[str, ...]
+    source_ir: Any = None    # pre-pass language IR (the Golden oracle input)
+
+    # -- execution ----------------------------------------------------------
+    def execute(self, arrays: dict[str, np.ndarray], scalars: dict[str, int],
+                executor: str = "vector", cache_hit: bool | None = None,
+                require_inputs: bool = True,
+                backend: str | ExecutorBackend | None = None,
+                **vm_kwargs) -> Execution:
+        for n, sp in self.in_specs.items():
+            if n not in arrays:
+                if require_inputs:
+                    raise TypeError(f"{self.name}: missing input array '{n}'")
+                continue
+            got = np.asarray(arrays[n])
+            if got.dtype.kind not in "iub":
+                raise TypeError(f"{self.name}: input '{n}' must be an "
+                                f"integer array, got dtype {got.dtype}")
+            if got.size != sp.size:
+                raise ValueError(
+                    f"{self.name}: input '{n}' has {got.size} elements, "
+                    f"compiled for {sp.size} (shape-specialized — recompile "
+                    f"via the decorated function)")
+            if _NP_DTYPE.get(got.dtype.itemsize, "i32") != sp.dtype:
+                raise ValueError(
+                    f"{self.name}: input '{n}' dtype {got.dtype} does not "
+                    f"match the compiled DRAM dtype {sp.dtype!r} "
+                    "(shape/dtype-specialized — recompile via the decorated "
+                    "function)")
+        missing = set(self.scalar_names) - set(scalars)
+        if missing:
+            raise TypeError(f"{self.name}: missing scalar param(s) "
+                            f"{sorted(missing)}")
+        if executor != "vector" and vm_kwargs:
+            raise TypeError(f"{self.name}: VM options {sorted(vm_kwargs)} "
+                            f"only apply to the vector executor, not "
+                            f"{executor!r}")
+        dram_init = {n: np.asarray(a).ravel() for n, a in arrays.items()}
+        if executor == "vector":
+            vm = VectorVM(self.result.dfg, dram_init,
+                          backend=(self.backend if backend is None
+                                   else backend), **vm_kwargs)
+        elif executor == "token":
+            vm = TokenVM(self.result.dfg, dram_init)
+        elif executor == "golden":
+            # the *pre-pass* language IR: an oracle independent of the
+            # optimization passes, like every other Golden use in the repo
+            vm = Golden(self.source_ir if self.source_ir is not None
+                        else self.result.prog, dram_init)
+        else:
+            raise ValueError(f"unknown executor {executor!r} "
+                             "(expected vector|token|golden)")
+        t0 = time.perf_counter()
+        dram = vm.run(**{k: int(v) for k, v in scalars.items()})
+        wall = time.perf_counter() - t0
+        report = RunReport(
+            executor=executor,
+            backend=vm.backend.name if executor == "vector" else None,
+            wall_s=wall, stats=vm.stats,
+            cycles=int(vm.estimated_cycles()) if executor == "vector" else 0,
+            lane_occupancy=(vm.lane_occupancy()
+                            if executor == "vector" else 1.0),
+            cache_hit=cache_hit)
+        outputs = tuple(np.asarray(dram[n]).copy()
+                        for n, _sz, _dt in self.out_info)
+        return Execution(outputs, dram, report, vm, self)
+
+    def _bind_arrays(self, args, kwargs):
+        arrays, scalars, _ = _bind_call(
+            self.name, self.in_names, args, kwargs,
+            scalar_names=self.scalar_names)
+        return arrays, scalars
+
+    def __call__(self, *args, **kwargs):
+        arrays, scalars = self._bind_arrays(args, kwargs)
+        return self.execute(arrays, scalars).unpacked()
+
+    def run_on(self, *args, executor: str = "vector", **kwargs) -> Execution:
+        """Run the same arrays on a chosen executor — the Golden language
+        oracle, the token-level reference VM, or the vectorized VM — for
+        cross-checking (DESIGN.md §5)."""
+        arrays, scalars = self._bind_arrays(args, kwargs)
+        return self.execute(arrays, scalars, executor=executor)
+
+
+# ---------------------------------------------------------------------------
+# The decorator
+# ---------------------------------------------------------------------------
+
+_REGISTRY: "weakref.WeakSet[ProgramFn]" = weakref.WeakSet()
+
+
+class ProgramFn:
+    """A ``@revet.program``-decorated function: callable array-in/array-out
+    with shape-specialized compile caching, plus AOT ``trace``/``lower``/
+    ``compile`` stages."""
+
+    def __init__(self, fn: Callable, *, outputs: dict,
+                 statics: Sequence[str] = (), name: str | None = None,
+                 pools: dict[str, dict] | None = None,
+                 options: CompileOptions | None = None,
+                 backend: str | ExecutorBackend | None = None):
+        self.fn = fn
+        self.name = name or fn.__name__
+        self.outputs = dict(outputs)
+        self.pools = dict(pools or {})
+        self.options = options
+        self.backend = backend
+        self.__doc__ = fn.__doc__
+        self.__name__ = self.name
+        self.__wrapped__ = fn
+
+        params = list(inspect.signature(fn).parameters.values())
+        if not params:
+            raise TypeError(f"{self.name}: traced function must take the "
+                            "main Block as its first parameter")
+        arr_kinds = (inspect.Parameter.POSITIONAL_ONLY,
+                     inspect.Parameter.POSITIONAL_OR_KEYWORD)
+        self.array_names = tuple(p.name for p in params[1:]
+                                 if p.kind in arr_kinds)
+        kwonly = [p for p in params
+                  if p.kind == inspect.Parameter.KEYWORD_ONLY]
+        self.static_names = tuple(statics)
+        self._defaults = {p.name: p.default for p in kwonly
+                          if p.default is not inspect.Parameter.empty}
+        kwonly_names = {p.name for p in kwonly}
+        unknown_statics = set(self.static_names) - kwonly_names
+        if unknown_statics:
+            raise TypeError(f"{self.name}: statics {sorted(unknown_statics)} "
+                            "must be keyword-only parameters")
+        self.scalar_names = tuple(p.name for p in kwonly
+                                  if p.name not in self.static_names)
+        bad = (set(self.scalar_names) | set(self.array_names)) \
+            & set(_RESERVED_KWARGS)
+        if bad:
+            raise TypeError(f"{self.name}: parameter name(s) {sorted(bad)} "
+                            "collide with reserved API keywords "
+                            f"{_RESERVED_KWARGS}")
+        unknown_outs = set(self.outputs) - set(self.array_names)
+        if unknown_outs:
+            raise TypeError(f"{self.name}: outputs {sorted(unknown_outs)} "
+                            "are not array parameters of the function")
+        self.out_names = tuple(n for n in self.array_names
+                               if n in self.outputs)
+        self.in_names = tuple(n for n in self.array_names
+                              if n not in self.outputs)
+        self._cache: dict[tuple, CompiledProgram] = {}
+        self._hits = 0
+        self._misses = 0
+        _REGISTRY.add(self)
+
+    # -- binding -------------------------------------------------------------
+    def _bind(self, args: tuple, kwargs: dict
+              ) -> tuple[dict, dict[str, int], dict[str, Any]]:
+        """Split call arguments into (input arrays, scalar params, statics)."""
+        return _bind_call(self.name, self.in_names, args, kwargs,
+                          scalar_names=self.scalar_names,
+                          static_names=self.static_names,
+                          defaults=self._defaults)
+
+    def _resolve_outputs(self, in_specs: dict[str, ArraySpec],
+                         scalars: dict[str, int], statics: dict[str, Any]
+                         ) -> tuple[tuple[str, int, str], ...]:
+        """Resolve the ``outputs=`` spec to concrete (name, size, dtype).
+
+        A spec value is ``size`` or ``(size, dtype)`` where ``size`` is an
+        int, the name of an input array (same number of elements), the name
+        of a scalar/static parameter (its value), or a callable receiving an
+        env dict of all of those."""
+        env: dict[str, Any] = {n: s.size for n, s in in_specs.items()}
+        env.update(statics)
+        env.update(scalars)
+        out = []
+        for name in self.out_names:
+            sz = self.outputs[name]
+            dtype = "i32"
+            if isinstance(sz, tuple):
+                sz, dtype = sz
+            if callable(sz):
+                sz = sz(env)
+            elif isinstance(sz, str):
+                if sz not in env:
+                    raise KeyError(
+                        f"{self.name}: output '{name}' sized by '{sz}', "
+                        f"which is not an input array or parameter")
+                sz = env[sz]
+            out.append((name, int(sz), dtype))
+        return tuple(out)
+
+    def _make_key(self, in_specs, out_info, statics, options, backend):
+        return (tuple((n, s.shape, s.dtype)
+                      for n, s in sorted(in_specs.items())),
+                out_info,
+                tuple(sorted(statics.items())),
+                dataclasses.astuple(options),
+                _backend_token(backend, options))
+
+    # -- tracing -------------------------------------------------------------
+    def trace(self, *args, **kwargs) -> Traced:
+        """Bind shapes (arrays or :func:`revet.spec` values) and run the
+        traced function once to build the ``lang.Prog``."""
+        arrays, scalars, statics = self._bind(args, kwargs)
+        in_specs = {n: _abstractify(a) for n, a in arrays.items()}
+        out_info = self._resolve_outputs(in_specs, scalars, statics)
+        return Traced(self, self._build_prog(in_specs, out_info, statics),
+                      in_specs, out_info, statics)
+
+    def _build_prog(self, in_specs: dict[str, ArraySpec],
+                    out_info: tuple[tuple[str, int, str], ...],
+                    statics: dict[str, Any]) -> Prog:
+        p = Prog(self.name)
+        out_by_name = {n: (sz, dt) for n, sz, dt in out_info}
+        for n in self.array_names:
+            if n in out_by_name:
+                sz, dt = out_by_name[n]
+                p.dram(n, sz, dt)
+            else:
+                s = in_specs[n]
+                p.dram(n, s.size, s.dtype)
+        for pool, cfg in self.pools.items():
+            p.ensure_pool(pool, **cfg)
+        handles = {n: _DramHandle(n) for n in self.array_names}
+        with p.main(*self.scalar_names) as opened:
+            if not self.scalar_names:
+                block, scalar_handles = opened, ()
+            else:
+                block, scalar_handles = opened[0], opened[1:]
+            self.fn(block, *(handles[n] for n in self.array_names),
+                    **dict(zip(self.scalar_names, scalar_handles)),
+                    **statics)
+        return p
+
+    # -- the cached call path -------------------------------------------------
+    def _cache_get(self, key) -> Optional[CompiledProgram]:
+        compiled = self._cache.get(key)
+        if compiled is not None:
+            self._hits += 1
+        return compiled
+
+    def _cache_put(self, key, result: CompileResult, backend,
+                   in_specs: dict[str, ArraySpec],
+                   out_info: tuple[tuple[str, int, str], ...],
+                   source_ir=None) -> CompiledProgram:
+        """The single cache-insertion path, shared by the jit-style call and
+        AOT ``Lowered.compile``."""
+        self._misses += 1
+        compiled = CompiledProgram(
+            name=self.name, result=result,
+            backend=make_backend(backend if backend is not None
+                                 else result.options.backend),
+            in_specs=dict(in_specs), out_info=out_info,
+            scalar_names=tuple(self.scalar_names),
+            in_names=tuple(self.in_names),
+            source_ir=source_ir)
+        self._cache[key] = compiled
+        return compiled
+
+    def _get_compiled(self, in_specs, scalars, statics,
+                      options: CompileOptions | None,
+                      backend) -> tuple[CompiledProgram, bool]:
+        options = options or self.options or CompileOptions()
+        out_info = self._resolve_outputs(in_specs, scalars, statics)
+        be = backend if backend is not None else self.backend
+        key = self._make_key(in_specs, out_info, statics, options, be)
+        compiled = self._cache_get(key)
+        if compiled is not None:
+            return compiled, True
+        prog = self._build_prog(in_specs, out_info, statics)
+        result = compile_program(prog, options)
+        return self._cache_put(key, result, be, in_specs, out_info,
+                               source_ir=prog.ir), False
+
+    def run(self, *args, options: CompileOptions | None = None,
+            backend: str | ExecutorBackend | None = None,
+            executor: str = "vector",
+            vm_kwargs: dict | None = None, **kwargs) -> Execution:
+        """Full call path returning the :class:`Execution` (outputs + DRAM +
+        VM + :class:`RunReport`); ``__call__`` is this, unpacked."""
+        if executor != "vector":
+            # golden/token never touch a backend or VM knobs; reject rather
+            # than silently compile-and-ignore
+            if backend is not None:
+                raise TypeError(f"{self.name}: backend= only applies to the "
+                                f"vector executor, not {executor!r}")
+            if vm_kwargs:
+                raise TypeError(f"{self.name}: vm_kwargs only apply to the "
+                                f"vector executor, not {executor!r}")
+        arrays, scalars, statics = self._bind(args, kwargs)
+        in_specs = {n: _abstractify(a) for n, a in arrays.items()}
+        compiled, hit = self._get_compiled(in_specs, scalars, statics,
+                                           options, backend)
+        # config-keyed cache: on a hit, still honor the *caller's* backend
+        # instance rather than the one bound at insertion time
+        be_override = backend if isinstance(backend, ExecutorBackend) else None
+        return compiled.execute(arrays, scalars, executor=executor,
+                                cache_hit=hit, backend=be_override,
+                                **(vm_kwargs or {}))
+
+    def __call__(self, *args, **kwargs):
+        return self.run(*args, **kwargs).unpacked()
+
+    def run_on(self, *args, executor: str = "vector", **kwargs) -> Execution:
+        """Cross-checking escape hatch: run through the compile cache, then
+        execute on ``golden`` / ``token`` / ``vector``."""
+        return self.run(*args, executor=executor, **kwargs)
+
+    def lower(self, *args, options: CompileOptions | None = None,
+              **kwargs) -> Lowered:
+        return self.trace(*args, **kwargs).lower(options)
+
+    # -- cache management ------------------------------------------------------
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(self._hits, self._misses, len(self._cache))
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+        self._hits = 0
+        self._misses = 0
+
+    def __repr__(self) -> str:
+        return (f"<revet.program {self.name}("
+                f"{', '.join(self.in_names)}) -> "
+                f"({', '.join(self.out_names)})>")
+
+
+def program(fn: Callable | None = None, *, outputs: dict,
+            statics: Sequence[str] = (), name: str | None = None,
+            pools: dict[str, dict] | None = None,
+            options: CompileOptions | None = None,
+            backend: str | ExecutorBackend | None = None):
+    """Decorate a tracer function into an array-in/array-out
+    :class:`ProgramFn`.
+
+    ``outputs`` maps output-array parameter names to size specs (see
+    :meth:`ProgramFn._resolve_outputs`); ``statics`` names keyword-only
+    parameters that are trace-time constants; ``pools`` pre-declares SRAM
+    pools (``{"default": dict(buf_words=64, n_bufs=2048)}``); ``options`` and
+    ``backend`` set per-function defaults, overridable per call.
+    """
+    def wrap(f: Callable) -> ProgramFn:
+        return ProgramFn(f, outputs=outputs, statics=statics, name=name,
+                         pools=pools, options=options, backend=backend)
+    return wrap(fn) if fn is not None else wrap
+
+
+# ---------------------------------------------------------------------------
+# Functional AOT stages + module-level cache management
+# ---------------------------------------------------------------------------
+
+def _as_program_fn(fn) -> ProgramFn:
+    if not isinstance(fn, ProgramFn):
+        raise TypeError("expected a @revet.program-decorated function; "
+                        "wrap plain tracers with revet.program(outputs=...)")
+    return fn
+
+
+def trace(fn: ProgramFn, *args, **kwargs) -> Traced:
+    """Functional form of ``fn.trace(...)``."""
+    return _as_program_fn(fn).trace(*args, **kwargs)
+
+
+def lower(fn: ProgramFn, *args, options: CompileOptions | None = None,
+          **kwargs) -> Lowered:
+    """Functional form of ``fn.trace(...).lower(options)``."""
+    return _as_program_fn(fn).lower(*args, options=options, **kwargs)
+
+
+def compile(fn: ProgramFn, *args, options: CompileOptions | None = None,
+            backend: str | ExecutorBackend | None = None,
+            **kwargs) -> CompiledProgram:
+    """Functional form of ``fn.trace(...).lower(options).compile(backend)``;
+    the result lands in ``fn``'s cache, so subsequent same-shape calls hit."""
+    return _as_program_fn(fn).lower(*args, options=options,
+                                    **kwargs).compile(backend)
+
+
+def cache_info() -> CacheInfo:
+    """Aggregate compile-cache counters across every live ProgramFn."""
+    hits = misses = size = 0
+    for pf in list(_REGISTRY):
+        ci = pf.cache_info()
+        hits += ci.hits
+        misses += ci.misses
+        size += ci.currsize
+    return CacheInfo(hits, misses, size)
+
+
+def clear_cache() -> None:
+    """Drop every live ProgramFn's compiled programs and reset counters."""
+    for pf in list(_REGISTRY):
+        pf.clear_cache()

@@ -1,22 +1,34 @@
-"""Shared app scaffolding for the Table III workloads."""
+"""Shared app scaffolding for the Table III workloads.
+
+Apps are built on the ``repro.api`` front-end: each module defines a
+module-level ``@revet.program`` tracer, and its ``build()`` packages concrete
+input arrays + reference outputs into an :class:`App`.  ``run_app`` is a thin
+wrapper over the decorated function's cached call path, so repeated runs of
+the same app at the same shapes reuse one
+:class:`~repro.api.CompiledProgram` (and its backend's jit cache).
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core.compiler import CompileOptions, CompileResult, compile_program
+from ..api import Execution, ProgramFn, RunReport
+from ..core.compiler import CompileOptions, CompileResult
 from ..core.lang import Prog
-from ..core.vector_vm import VectorVM
 
 
 @dataclass
 class App:
     """One benchmark application instance.
 
+    ``fn`` is the app's ``@revet.program`` front-end and ``dram_init`` its
+    concrete input arrays (keyed by array-parameter name); ``prog`` is the
+    shape-specialized ``lang.Prog`` traced from them, kept so the Golden /
+    TokenVM layers can run the app without going through the API.
     ``expected`` maps DRAM array name -> expected prefix values (reference
-    implementation output). ``bytes_processed`` follows Table III's accounting
-    (input + output bytes), used to normalize throughput to GB/s.
+    implementation output). ``bytes_processed`` follows Table III's
+    accounting (input + output bytes), used to normalize throughput to GB/s.
     """
     name: str
     prog: Prog
@@ -25,6 +37,21 @@ class App:
     expected: dict[str, np.ndarray]
     bytes_processed: int
     meta: dict = field(default_factory=dict)
+    fn: ProgramFn | None = None
+    statics: dict = field(default_factory=dict)
+
+
+def make_app(fn: ProgramFn, *, name: str, inputs: dict[str, np.ndarray],
+             params: dict[str, int], expected: dict[str, np.ndarray],
+             bytes_processed: int, meta: dict | None = None,
+             statics: dict | None = None) -> App:
+    """Package a ``@revet.program`` + concrete arrays into an :class:`App`,
+    tracing the shape-specialized program once for the non-API executors."""
+    statics = dict(statics or {})
+    traced = fn.trace(**inputs, **params, **statics)
+    return App(name=name, prog=traced.prog, dram_init=inputs, params=params,
+               expected=expected, bytes_processed=bytes_processed,
+               meta=meta or {}, fn=fn, statics=statics)
 
 
 def check_app(app: App, got: dict) -> None:
@@ -35,28 +62,39 @@ def check_app(app: App, got: dict) -> None:
             got_arr, want, err_msg=f"{app.name}: dram '{name}' mismatch")
 
 
+@dataclass
+class AppRun:
+    """Result of :func:`run_app`.  Iterates as the historical
+    ``(compile_result, vm, dram_out)`` triple; the structured
+    :class:`~repro.api.RunReport` (wall time, stats, cycles) replaces the
+    old ``vm.run_wall_s`` attribute injection."""
+    result: CompileResult
+    vm: object
+    dram: dict[str, np.ndarray]
+    report: RunReport
+    execution: Execution
+
+    def __iter__(self):
+        return iter((self.result, self.vm, self.dram))
+
+
 def run_app(app: App, opts: CompileOptions | None = None,
-            backend=None, check: bool = True, **vm_kw
-            ) -> tuple[CompileResult, VectorVM, dict]:
-    """Compile and execute one app on the VectorVM.
+            backend=None, check: bool = True, **vm_kw) -> AppRun:
+    """Execute one app through the ``repro.api`` cached call path.
 
     The executor backend comes from ``backend`` when given, else from
     ``opts.backend`` (``CompileOptions(backend="jax")`` routes the hot loops
-    through the Pallas kernel layer — see core/backend.py).
-    Returns ``(compile_result, vm, dram_out)``; the executor wall time (the
-    ``vm.run`` call only, excluding compilation) lands in ``vm.run_wall_s``.
+    through the Pallas kernel layer — see core/backend.py).  Compilation is
+    cached per (shapes, options, backend) on ``app.fn``; the report's
+    ``cache_hit`` records whether this call compiled.
     """
-    import time
-    res = compile_program(app.prog, opts)
-    vm = VectorVM(res.dfg, app.dram_init,
-                  backend=backend if backend is not None
-                  else res.options.backend, **vm_kw)
-    t0 = time.perf_counter()
-    out = vm.run(**app.params)
-    vm.run_wall_s = time.perf_counter() - t0
+    assert app.fn is not None, f"{app.name}: app has no @revet.program fn"
+    ex = app.fn.run(**app.dram_init, **app.params, **app.statics,
+                    options=opts, backend=backend,
+                    vm_kwargs=vm_kw or None)
     if check:
-        check_app(app, out)
-    return res, vm, out
+        check_app(app, ex.dram)
+    return AppRun(ex.result, ex.vm, ex.dram, ex.report, ex)
 
 
 def pack_strings(strings: list[bytes]) -> tuple[np.ndarray, np.ndarray]:

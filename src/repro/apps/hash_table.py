@@ -5,8 +5,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.lang import Prog
-from .common import App
+from .. import api as revet
+from .common import App, make_app
 
 _EMPTY = 0  # sentinel key
 
@@ -17,6 +17,33 @@ def _mix(x: int) -> int:
     x = x * 0x45D9F3B & 0xFFFFFFFF
     x ^= x >> 16
     return x
+
+
+@revet.program(name="hash_table", outputs={"results": "queries"},
+               statics=("n_slots",))
+def hash_table_program(m, table_k, table_v, queries, results, *, count,
+                       n_slots=256):
+    with m.foreach(count) as (b, i):
+        key = b.let(b.dram_load(queries, i))
+        h = b.let(key)
+        b.set(h, h ^ (h >> 16))
+        b.set(h, h * 0x45D9F3B)
+        b.set(h, h ^ (h >> 16))
+        b.set(h, h.umod(n_slots))
+        it = b.read_it(table_k, h, tile=8)
+        off = b.let(0, "off")
+        res = b.let(0, "res")
+        done = b.let(0, "done")
+        with b.while_(lambda hd: (hd.let(hd.deref(it), "cur") != 0)
+                      & (done == 0)) as w:
+            cur = w.let(w.deref(it))
+            with w.if_(cur == key) as f:
+                v = f.dram_load(table_v, h + off)
+                f.set(res, v)
+                f.set(done, 1)
+            w.advance(it)
+            w.set(off, off + 1)
+        b.dram_store(results, i, res)
 
 
 def build(n_lookups: int = 64, n_slots: int = 256, load: float = 0.25,
@@ -40,46 +67,17 @@ def build(n_lookups: int = 64, n_slots: int = 256, load: float = 0.25,
     lookups = np.where(hit, rng.choice(keys, n_lookups),
                        rng.integers(1 << 20, 1 << 21, n_lookups))
 
-    p = Prog("hash_table")
-    # table padded by n_slots so linear probes never wrap (load 25%)
-    p.dram("table_k", 2 * n_slots)
-    p.dram("table_v", 2 * n_slots)
-    p.dram("queries", n_lookups)
-    p.dram("results", n_lookups)
-
-    with p.main("count") as (m, count):
-        with m.foreach(count) as (b, i):
-            key = b.let(b.dram_load("queries", i))
-            h = b.let(key)
-            b.set(h, h ^ (h >> 16))
-            b.set(h, h * 0x45D9F3B)
-            b.set(h, h ^ (h >> 16))
-            b.set(h, h.umod(n_slots))
-            it = b.read_it("table_k", h, tile=8)
-            off = b.let(0, "off")
-            res = b.let(0, "res")
-            done = b.let(0, "done")
-            with b.while_(lambda hd: (hd.let(hd.deref(it), "cur") != 0)
-                          & (done == 0)) as w:
-                cur = w.let(w.deref(it))
-                with w.if_(cur == key) as f:
-                    v = f.dram_load("table_v", h + off)
-                    f.set(res, v)
-                    f.set(done, 1)
-                w.advance(it)
-                w.set(off, off + 1)
-            b.dram_store("results", i, res)
-
-    # duplicated-at-wrap table copy for non-wrapping probes
+    # duplicated-at-wrap table copy so linear probes never wrap (load 25%)
     tk2 = np.concatenate([table_k, table_k])
     tv2 = np.concatenate([table_v, table_v])
 
     kv = dict(zip(map(int, keys), map(int, vals)))
     expected = np.array([kv.get(int(q), 0) for q in lookups])
-    return App(
-        name="hash_table", prog=p,
-        dram_init={"table_k": tk2, "table_v": tv2, "queries": lookups},
+    return make_app(
+        hash_table_program, name="hash_table",
+        inputs={"table_k": tk2, "table_v": tv2, "queries": lookups},
         params={"count": n_lookups},
+        statics={"n_slots": n_slots},
         expected={"results": expected},
         bytes_processed=n_lookups * 4 * 2,  # Table III: keys+values moved
         meta={"threads": n_lookups, "features": "ReadIt probe, while"})

@@ -8,8 +8,11 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.lang import Prog, select
-from .common import App, pack_strings
+from .. import api as revet
+from ..core.lang import select
+from .common import App, make_app, pack_strings, to_i32
+
+_PAD = 16  # iterator-overfetch padding appended to the input blob
 
 
 def _gen_addresses(n: int, valid_frac: float, rng) -> list[bytes]:
@@ -58,24 +61,24 @@ def _scan_ipv4(b, it, w_block):
     return ok, val
 
 
+@revet.program(name="ipv4", outputs={"out": "offsets"},
+               statics=("out_is_value", "replicate"))
+def ipv4_program(m, input, offsets, out, *, count,
+                 out_is_value=False, replicate=2):
+    with m.foreach(count) as (b, i):
+        off = b.let(b.dram_load(offsets, i))
+        with b.replicate(replicate) as r:
+            it = r.read_it(input, off, tile=16)
+            ok, val = _scan_ipv4(r, it, r)
+            r.dram_store(out, i, val if out_is_value else ok)
+
+
 def _build_common(name: str, out_is_value: bool, n_strings: int,
                   valid_frac: float, replicate: int, seed: int) -> App:
     rng = np.random.default_rng(seed)
     strings = _gen_addresses(n_strings, valid_frac, rng)
     blob, offs = pack_strings(strings)
-
-    p = Prog(name)
-    p.dram("input", len(blob) + 16, "i8")
-    p.dram("offsets", n_strings)
-    p.dram("out", n_strings)
-
-    with p.main("count") as (m, count):
-        with m.foreach(count) as (b, i):
-            off = b.let(b.dram_load("offsets", i))
-            with b.replicate(replicate) as r:
-                it = r.read_it("input", off, tile=16)
-                ok, val = _scan_ipv4(r, it, r)
-                r.dram_store("out", i, val if out_is_value else ok)
+    blob = np.concatenate([blob, np.zeros(_PAD, np.uint8)])
 
     def ref(s: bytes):
         parts = s.split(b".")
@@ -91,16 +94,16 @@ def _build_common(name: str, out_is_value: bool, n_strings: int,
             v = (v << 8) | x
         return 1, v
 
-    from .common import to_i32
     refs = [ref(s) for s in strings]
     expected = np.array([to_i32(r[1]) if out_is_value else r[0]
                          for r in refs])
-    return App(
-        name=name, prog=p,
-        dram_init={"input": blob, "offsets": offs},
+    return make_app(
+        ipv4_program, name=name,
+        inputs={"input": blob, "offsets": offs},
         params={"count": n_strings},
+        statics={"out_is_value": out_is_value, "replicate": replicate},
         expected={"out": expected},
-        bytes_processed=len(blob) + 4 * n_strings,
+        bytes_processed=len(blob) - _PAD + 4 * n_strings,
         meta={"threads": n_strings, "features": "replicate(x2), ReadIt, "
               "nested if, while"})
 

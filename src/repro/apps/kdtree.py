@@ -12,8 +12,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.lang import Prog, select
-from .common import App
+from .. import api as revet
+from ..core.lang import select
+from .common import App, make_app
 
 
 class _Node:
@@ -52,6 +53,45 @@ def _build_tree(pts: np.ndarray, leaf_size: int = 8):
             arr("start"), arr("count"), pts[np.array(order)])
 
 
+@revet.program(name="kdtree",
+               outputs={"results": lambda env: env["rects"] // 4})
+def kdtree_program(m, node_dim, node_split, node_left, node_right,
+                   node_start, node_count, px, py, rects, results, *, count):
+    with m.foreach(count) as (b, q):
+        x0 = b.let(b.dram_load(rects, q * 4 + 0))
+        x1 = b.let(b.dram_load(rects, q * 4 + 1))
+        y0 = b.let(b.dram_load(rects, q * 4 + 2))
+        y1 = b.let(b.dram_load(rects, q * 4 + 3))
+        node = b.let(0, "node")
+        with b.while_(b.let(1) == 1) as w:
+            nl = w.let(w.dram_load(node_left, node))
+            with w.if_(nl < 0) as leaf:
+                st = leaf.let(leaf.dram_load(node_start, node))
+                nc = leaf.let(leaf.dram_load(node_count, node))
+                j = leaf.let(0)
+                local = leaf.let(0)
+                with leaf.while_(j < nc) as scan:
+                    pxv = scan.let(scan.dram_load(px, st + j))
+                    pyv = scan.let(scan.dram_load(py, st + j))
+                    inx = scan.let((pxv >= x0) & (pxv <= x1))
+                    iny = scan.let((pyv >= y0) & (pyv <= y1))
+                    scan.set(local, local + (inx & iny))
+                    scan.set(j, j + 1)
+                leaf.atomic_add(results, q, local)
+                leaf.exit_()
+            d = w.let(w.dram_load(node_dim, node))
+            sp = w.let(w.dram_load(node_split, node))
+            nr = w.let(w.dram_load(node_right, node))
+            lo = w.let(select(d == 0, x0, y0))
+            hi = w.let(select(d == 0, x1, y1))
+            need_l = w.let(lo <= sp)
+            need_r = w.let((hi >= sp))
+            first = w.let(select(need_l, nl, nr))
+            nkids = w.let(need_l + need_r)
+            with w.fork(nkids) as (fb, k):
+                fb.set(node, select(k == 0, first, nr))
+
+
 def build(n_points: int = 512, n_queries: int = 16, coord_max: int = 1 << 14,
           seed: int = 0) -> App:
     rng = np.random.default_rng(seed)
@@ -64,66 +104,18 @@ def build(n_points: int = 512, n_queries: int = 16, coord_max: int = 1 << 14,
     rects = np.stack([centers[:, 0] - half, centers[:, 0] + half,
                       centers[:, 1] - half, centers[:, 1] + half], axis=1)
 
-    p = Prog("kdtree")
-    n_nodes = len(dim)
-    p.dram("node_dim", n_nodes)
-    p.dram("node_split", n_nodes)
-    p.dram("node_left", n_nodes)
-    p.dram("node_right", n_nodes)
-    p.dram("node_start", n_nodes)
-    p.dram("node_count", n_nodes)
-    p.dram("px", n_points)
-    p.dram("py", n_points)
-    p.dram("rects", n_queries * 4)
-    p.dram("results", n_queries)
-
-    with p.main("count") as (m, cnt):
-        with m.foreach(cnt) as (b, q):
-            x0 = b.let(b.dram_load("rects", q * 4 + 0))
-            x1 = b.let(b.dram_load("rects", q * 4 + 1))
-            y0 = b.let(b.dram_load("rects", q * 4 + 2))
-            y1 = b.let(b.dram_load("rects", q * 4 + 3))
-            node = b.let(0, "node")
-            with b.while_(b.let(1) == 1) as w:
-                nl = w.let(w.dram_load("node_left", node))
-                with w.if_(nl < 0) as leaf:
-                    st = leaf.let(leaf.dram_load("node_start", node))
-                    nc = leaf.let(leaf.dram_load("node_count", node))
-                    j = leaf.let(0)
-                    local = leaf.let(0)
-                    with leaf.while_(j < nc) as scan:
-                        px = scan.let(scan.dram_load("px", st + j))
-                        py = scan.let(scan.dram_load("py", st + j))
-                        inx = scan.let((px >= x0) & (px <= x1))
-                        iny = scan.let((py >= y0) & (py <= y1))
-                        scan.set(local, local + (inx & iny))
-                        scan.set(j, j + 1)
-                    leaf.atomic_add("results", q, local)
-                    leaf.exit_()
-                d = w.let(w.dram_load("node_dim", node))
-                sp = w.let(w.dram_load("node_split", node))
-                nr = w.let(w.dram_load("node_right", node))
-                lo = w.let(select(d == 0, x0, y0))
-                hi = w.let(select(d == 0, x1, y1))
-                need_l = w.let(lo <= sp)
-                need_r = w.let((hi >= sp))
-                first = w.let(select(need_l, nl, nr))
-                nkids = w.let(need_l + need_r)
-                with w.fork(nkids) as (fb, k):
-                    fb.set(node, select(k == 0, first, nr))
-
     expected = np.array([
         int(((pts[:, 0] >= r[0]) & (pts[:, 0] <= r[1]) &
              (pts[:, 1] >= r[2]) & (pts[:, 1] <= r[3])).sum())
         for r in rects])
     fetched = expected.sum() * 8  # Table III: size of fetched counted points
 
-    return App(
-        name="kdtree", prog=p,
-        dram_init={"node_dim": dim, "node_split": split, "node_left": left,
-                   "node_right": right, "node_start": start,
-                   "node_count": count, "px": opts[:, 0], "py": opts[:, 1],
-                   "rects": rects.reshape(-1)},
+    return make_app(
+        kdtree_program, name="kdtree",
+        inputs={"node_dim": dim, "node_split": split, "node_left": left,
+                "node_right": right, "node_start": start,
+                "node_count": count, "px": opts[:, 0], "py": opts[:, 1],
+                "rects": rects.reshape(-1)},
         params={"count": n_queries},
         expected={"results": expected},
         bytes_processed=int(fetched),

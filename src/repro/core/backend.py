@@ -140,6 +140,37 @@ _RED_UFUNC = {
 # Windowed segmented reduction — vectorized numpy ground truth
 # ---------------------------------------------------------------------------
 
+def segment_reduce_reference(kinds: np.ndarray, vals: np.ndarray | None,
+                             op: str, init: int, acc: int, group_open: bool
+                             ) -> tuple[np.ndarray, np.ndarray, int, bool]:
+    """The historical per-token ``_reduce_out`` loop, kept verbatim as the
+    *semantic reference* for :func:`segment_reduce_window_np` (tests compare
+    the vectorized form against this; benchmarks use it as the baseline).
+    Do not change one without the other."""
+    out_kinds, out_vals = [], []
+    for i in range(len(kinds)):
+        k = int(kinds[i])
+        if k == 0:
+            if vals is not None:
+                acc = _scalar_red(op, acc, int(vals[i]))
+            group_open = True
+        elif k == 1:
+            out_kinds.append(0)
+            out_vals.append(acc)
+            acc = init
+            group_open = False
+        else:
+            if group_open:
+                out_kinds.append(0)
+                out_vals.append(acc)
+                acc = init
+                group_open = False
+            out_kinds.append(k - 1)
+            out_vals.append(0)
+    return (np.array(out_kinds, np.int64), np.array(out_vals, np.int64),
+            acc, group_open)
+
+
 def segment_reduce_window_np(kinds: np.ndarray, vals: np.ndarray | None,
                              op: str, init: int, acc: int, group_open: bool
                              ) -> tuple[np.ndarray, np.ndarray, int, bool]:

@@ -3,12 +3,17 @@
 Programs look close to the paper's syntax (Fig. 7):
 
     p = Prog("strlen")
-    inp = p.dram("input", 1 << 20, "i8")
-    offs = p.dram("offsets", 1024)
-    lens = p.dram("lengths", 1024)
+    p.dram("input", 1 << 20, "i8")
+    p.dram("offsets", 1024)
+    p.dram("lengths", 1024)
     with p.main("count") as (m, count):
-        with m.foreach(count) as (b, idx):
-            off = b.let(b.view_read(...)) ...
+        with m.foreach(count, step=16) as (b, outer):
+            view = b.read_view("offsets", outer, 16)
+            with b.foreach(16) as (t, idx):
+                off = t.let(t.view_load(view, idx)) ...
+
+(``repro.api`` / ``import revet`` wraps this builder in an array-in/array-out
+front-end that infers the ``dram`` declarations from real arrays.)
 
 Expression handles overload Python operators; comparisons produce i32
 predicates (1/0). Shift-right is logical via ``>>``; use ``.ashr()`` for
@@ -24,7 +29,7 @@ from .ir import Expr, const, var
 
 Num = Union[int, "E"]
 
-__all__ = ["E", "Prog", "c"]
+__all__ = ["Block", "E", "Prog", "c", "select"]
 
 
 def _expr(x: Num) -> Expr:

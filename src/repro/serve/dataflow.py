@@ -4,24 +4,25 @@
 programs*: each request is one ``main()`` invocation of a compiled program
 (its own parameter tuple + DRAM image), and the engine drains the queue
 through a VectorVM whose lane-level hot loops run on a pluggable executor
-backend (core/backend.py, DESIGN.md §3). The compiled DFG and the backend
-instance are shared across requests — backends are stateless, so one Pallas
-jit cache serves the whole queue; only the VM (queues, DRAM, pools) is
-per-request state.
+backend (core/backend.py, DESIGN.md §3).
 
-Backend selection threads through ``CompileOptions(backend=...)`` exactly as
-in the apps/benchmarks layers, so a serving deployment flips one flag to move
-from the numpy oracle to the TPU kernel path.
+The engine takes a :class:`repro.api.CompiledProgram` — the unit the
+front-end's compile cache hands out — so a serving deployment compiles once
+per program *shape*, not once per engine: many engines (or engine restarts)
+share one DFG and one backend instance, and because backends are stateless
+one Pallas jit cache serves every queue.  Only the VM (queues, DRAM, pools)
+is per-request state.  Passing a raw ``lang.Prog`` still works as a shim and
+compiles on the spot, exactly as before the ``repro.api`` redesign.
 """
 from __future__ import annotations
 
 import collections
-import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
+from ..api import CompiledProgram, RunReport
 from ..core.backend import ExecutorBackend, make_backend
 from ..core.compiler import CompileOptions, CompileResult, compile_program
 from ..core.vector_vm import VectorVM
@@ -38,18 +39,50 @@ class DataflowRequest:
 class DataflowResponse:
     rid: int
     dram: dict[str, np.ndarray]
-    stats: collections.Counter
-    cycles: int
-    wall_s: float
+    report: RunReport
+
+    # historical field names, kept as views over the report
+    @property
+    def stats(self) -> collections.Counter:
+        return self.report.stats
+
+    @property
+    def cycles(self) -> int:
+        return self.report.cycles
+
+    @property
+    def wall_s(self) -> float:
+        return self.report.wall_s
 
 
 class DataflowEngine:
-    def __init__(self, prog, opts: CompileOptions | None = None,
+    """Drain a request queue through one compiled dataflow program.
+
+    ``prog`` may be a :class:`repro.api.CompiledProgram` (preferred — no
+    compilation happens here, and the backend instance rides along) or a
+    ``lang.Prog``/``ir.Program`` (legacy shim — compiled once with ``opts``).
+    ``backend`` overrides the compiled/``opts`` backend when given.
+    """
+
+    def __init__(self, prog: Union[CompiledProgram, object],
+                 opts: CompileOptions | None = None,
                  backend: str | ExecutorBackend | None = None,
                  queue_cap: int = 1 << 16):
-        self.result: CompileResult = compile_program(prog, opts)
-        self.backend = make_backend(
-            backend if backend is not None else self.result.options.backend)
+        if isinstance(prog, CompiledProgram):
+            if opts is not None:
+                raise TypeError(
+                    "DataflowEngine: opts= has no effect on an "
+                    "already-compiled program; pass them to the front-end "
+                    "compile (revet.compile(fn, ..., options=opts)) instead")
+            self.compiled: Optional[CompiledProgram] = prog
+            self.result: CompileResult = prog.result
+            self.backend = (make_backend(backend) if backend is not None
+                            else prog.backend)
+        else:
+            self.compiled = None
+            self.result = compile_program(prog, opts)
+            self.backend = make_backend(
+                backend if backend is not None else self.result.options.backend)
         self.queue_cap = queue_cap
         self.queue: collections.deque[DataflowRequest] = collections.deque()
         self.done: list[DataflowResponse] = []
@@ -63,14 +96,25 @@ class DataflowEngine:
         if not self.queue:
             return None
         req = self.queue.popleft()
-        vm = VectorVM(self.result.dfg, req.dram_init,
-                      queue_cap=self.queue_cap, backend=self.backend)
-        t0 = time.perf_counter()
-        dram = vm.run(**req.params)
-        resp = DataflowResponse(req.rid, dram, vm.stats,
-                                vm.estimated_cycles(),
-                                time.perf_counter() - t0)
-        self.agg.update(vm.stats)
+        if self.compiled is not None:
+            ex = self.compiled.execute(
+                dict(req.dram_init or {}), req.params,
+                require_inputs=False, backend=self.backend,
+                queue_cap=self.queue_cap)
+            dram, report = ex.dram, ex.report
+        else:
+            import time
+            vm = VectorVM(self.result.dfg, req.dram_init,
+                          queue_cap=self.queue_cap, backend=self.backend)
+            t0 = time.perf_counter()
+            dram = vm.run(**req.params)
+            report = RunReport(
+                executor="vector", backend=vm.backend.name,
+                wall_s=time.perf_counter() - t0, stats=vm.stats,
+                cycles=vm.estimated_cycles(),
+                lane_occupancy=vm.lane_occupancy())
+        resp = DataflowResponse(req.rid, dram, report)
+        self.agg.update(report.stats)
         self.done.append(resp)
         return resp
 

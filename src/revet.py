@@ -1,0 +1,18 @@
+"""``import revet`` — the user-facing namespace for the Revet front-end.
+
+Re-exports :mod:`repro.api` (the ``@revet.program`` decorator, AOT
+``trace``/``lower``/``compile`` stages, and compile-cache management) plus
+the handful of language/compiler names a program author needs.
+"""
+from repro.api import (ArraySpec, CacheInfo, CompiledProgram, Execution,
+                       Lowered, ProgramFn, RunReport, Traced, cache_info,
+                       clear_cache, compile, lower, program, spec, trace)
+from repro.core.compiler import CompileOptions
+from repro.core.lang import Block, E, Prog, c, select
+
+__all__ = [
+    "ArraySpec", "Block", "CacheInfo", "CompileOptions", "CompiledProgram",
+    "E", "Execution", "Lowered", "Prog", "ProgramFn", "RunReport", "Traced",
+    "c", "cache_info", "clear_cache", "compile", "lower", "program",
+    "select", "spec", "trace",
+]

@@ -1,0 +1,284 @@
+"""The ``repro.api`` / ``import revet`` front-end (DESIGN.md §5).
+
+Covers: the shape/dtype/options/backend-keyed compile cache (hit identity +
+miss triggers + counters), AOT trace/lower/compile staging, the
+``run_on`` executor cross-check, the structured RunReport, and the
+acceptance bar for the redesign — every Table III app called through
+``@revet.program`` must produce bit-identical DRAM to the pre-redesign
+direct path (``compile_program`` + ``VectorVM``) on both the numpy and jax
+backends, with repeated calls performing zero recompilation.
+"""
+import numpy as np
+import pytest
+
+import revet
+from repro.apps import ALL_APPS
+from repro.apps.common import run_app
+from repro.core.backend import JaxBackend
+from repro.core.compiler import CompileOptions, compile_program
+from repro.core.vector_vm import VectorVM
+
+
+@pytest.fixture(scope="module")
+def jax_jnp():
+    return JaxBackend(route="jnp")
+
+
+def _make_doubler():
+    @revet.program(outputs={"dst": "src"})
+    def doubler(b, src, dst, *, n):
+        with b.foreach(n) as (t, i):
+            v = t.let(t.dram_load(src, i))
+            t.dram_store(dst, i, v * 2)
+    return doubler
+
+
+# ---------------------------------------------------------------------------
+# Compile cache: hits, misses, counters
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_same_shapes_object_identity():
+    fn = _make_doubler()
+    src = np.arange(8)
+    ex1 = fn.run(src, n=8)
+    ex2 = fn.run(src + 100, n=8)           # same shapes, different values
+    assert ex2.compiled is ex1.compiled    # zero recompilation
+    assert ex1.report.cache_hit is False and ex2.report.cache_hit is True
+    assert fn.cache_info() == (1, 1, 1)
+    np.testing.assert_array_equal(ex2.outputs[0], (src + 100) * 2)
+
+
+def test_cache_miss_on_shape_dtype_options_backend(jax_jnp):
+    fn = _make_doubler()
+    src = np.arange(8)
+    base = fn.run(src, n=8).compiled
+    assert fn.run(np.arange(16), n=16).compiled is not base       # shape
+    assert fn.run(src.astype(np.uint8), n=8).compiled is not base  # dtype
+    opts = CompileOptions(if_to_select=False)
+    assert fn.run(src, n=8, options=opts).compiled is not base    # options
+    assert fn.run(src, n=8, backend=jax_jnp).compiled is not base  # backend
+    ci = fn.cache_info()
+    assert ci.misses == 5 and ci.hits == 0 and ci.currsize == 5
+    # every variant is itself cached
+    assert fn.run(src, n=8, backend=jax_jnp).report.cache_hit is True
+    assert fn.cache_info().hits == 1
+
+
+def test_clear_cache_and_module_aggregate():
+    fn = _make_doubler()
+    fn.run(np.arange(4), n=4)
+    before = revet.cache_info()
+    assert before.misses >= 1 and before.currsize >= 1
+    fn.clear_cache()
+    assert fn.cache_info() == (0, 0, 0)
+    fn.run(np.arange(4), n=4)
+    fn.run(np.arange(4), n=4)
+    assert fn.cache_info() == (1, 1, 1)
+    revet.clear_cache()
+    assert revet.cache_info() == (0, 0, 0)
+
+
+def test_fresh_backend_instance_hits_cache():
+    """Backends are stateless: the cache keys their configuration, not
+    identity, but each call's VM still uses the caller's instance."""
+    fn = _make_doubler()
+    src = np.arange(8)
+    b1, b2 = JaxBackend(route="jnp"), JaxBackend(route="jnp")
+    ex1 = fn.run(src, n=8, backend=b1)
+    ex2 = fn.run(src, n=8, backend=b2)
+    assert ex2.compiled is ex1.compiled and ex2.report.cache_hit is True
+    assert ex1.vm.backend is b1 and ex2.vm.backend is b2
+    assert fn.cache_info() == (1, 1, 1)
+    # the string spec resolves to the same configuration -> same entry
+    ex3 = fn.run(src, n=8, backend="jax")
+    assert ex3.compiled is ex1.compiled
+    assert fn.cache_info() == (2, 1, 1)
+
+
+def test_scalar_values_do_not_recompile():
+    fn = _make_doubler()
+    src = np.arange(8)
+    a = fn.run(src, n=8).compiled
+    b = fn.run(src, n=4).compiled          # fewer threads, same shapes
+    assert a is b
+    assert fn.cache_info() == (1, 1, 1)
+
+
+# ---------------------------------------------------------------------------
+# AOT staging: trace -> lower -> compile, method and functional forms
+# ---------------------------------------------------------------------------
+
+def test_aot_stages_mirror_jit_lower_compile():
+    fn = _make_doubler()
+    traced = fn.trace(revet.spec(8), n=8)
+    assert traced.prog.ir.dram["src"].size == 8
+    assert traced.out_info == (("dst", 8, "i32"),)
+    lowered = traced.lower(CompileOptions())
+    assert lowered.result.dfg.stats()["contexts"] > 0
+    compiled = lowered.compile()
+    # AOT compile landed in the cache: the jit-style call now hits
+    ex = fn.run(np.arange(8), n=8)
+    assert ex.report.cache_hit is True and ex.compiled is compiled
+    out = compiled(np.arange(8), n=8)
+    np.testing.assert_array_equal(out, np.arange(8) * 2)
+
+
+def test_functional_aot_forms():
+    fn = _make_doubler()
+    tr = revet.trace(fn, revet.spec(6), n=6)
+    assert isinstance(tr, revet.Traced)
+    lo = revet.lower(fn, revet.spec(6), n=6)
+    assert isinstance(lo, revet.Lowered)
+    co = revet.compile(fn, revet.spec(6), n=6)
+    assert isinstance(co, revet.CompiledProgram)
+    np.testing.assert_array_equal(co(np.arange(6), n=6), np.arange(6) * 2)
+    with pytest.raises(TypeError):
+        revet.trace(lambda b: None)
+
+
+def test_compiled_program_shape_guard():
+    fn = _make_doubler()
+    co = revet.compile(fn, revet.spec(8), n=8)
+    with pytest.raises(ValueError, match="shape-specialized"):
+        co(np.arange(9), n=9)
+    with pytest.raises(TypeError, match="integer array"):
+        co(np.linspace(0, 1, 8), n=8)          # floats never truncate
+    with pytest.raises(ValueError, match="dtype"):
+        co(np.arange(8, dtype=np.uint8), n=8)  # i8 vs compiled-for i32
+
+
+# ---------------------------------------------------------------------------
+# Outputs spec resolution
+# ---------------------------------------------------------------------------
+
+def test_output_spec_forms():
+    @revet.program(outputs={"a": 4,                       # int
+                            "b": "src",                   # input-sized
+                            "c": "k",                     # scalar-sized
+                            "d": (lambda env: env["src"] // 2, "i8")})
+    def multi(b_, src, a, b, c, d, *, k):
+        with b_.foreach(k) as (t, i):
+            t.dram_store(a, i, i)
+            t.dram_store(b, i, i)
+            t.dram_store(c, i, i)
+            t.dram_store(d, i, i)
+    tr = multi.trace(revet.spec(8), k=3)
+    sizes = {n: d.size for n, d in tr.prog.ir.dram.items()}
+    assert sizes == {"src": 8, "a": 4, "b": 8, "c": 3, "d": 4}
+    assert tr.prog.ir.dram["d"].dtype == "i8"
+    outs = multi(np.arange(8), k=3)
+    assert [len(o) for o in outs] == [4, 8, 3, 4]
+
+
+def test_binding_errors():
+    fn = _make_doubler()
+    with pytest.raises(TypeError, match="missing scalar"):
+        fn(np.arange(4))
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        fn(np.arange(4), n=4, bogus=1)
+    with pytest.raises(TypeError, match="missing input"):
+        fn(n=4)
+    with pytest.raises(TypeError):
+        revet.program(outputs={"nope": 4})(lambda b, src: None)
+    with pytest.raises(TypeError, match="reserved"):
+        revet.program(outputs={"out": 4})(lambda b, backend, out: None)
+    with pytest.raises(TypeError, match="vector executor"):
+        fn.run_on(np.arange(4), n=4, executor="golden", backend="jax")
+
+
+# ---------------------------------------------------------------------------
+# RunReport + executor cross-check escape hatch
+# ---------------------------------------------------------------------------
+
+def test_run_report_fields():
+    fn = _make_doubler()
+    ex = fn.run(np.arange(8), n=8)
+    r = ex.report
+    assert r.executor == "vector" and r.backend == "numpy"
+    assert r.wall_s > 0 and r.cycles > 0 and 0 < r.lane_occupancy <= 1
+    assert r.stats["ticks"] > 0
+
+
+def test_run_on_cross_checks_executors():
+    fn = _make_doubler()
+    src = np.arange(12)
+    outs = {}
+    for exe in ("golden", "token", "vector"):
+        ex = fn.run_on(src, n=12, executor=exe)
+        assert ex.report.executor == exe
+        outs[exe] = ex.outputs[0]
+    # golden must be a genuinely independent oracle: it runs the *pre-pass*
+    # language IR, not the optimized post-pass IR the VMs compiled from
+    assert ex.compiled.source_ir is not None
+    assert ex.compiled.source_ir is not ex.compiled.result.prog
+    np.testing.assert_array_equal(outs["golden"], outs["token"])
+    np.testing.assert_array_equal(outs["golden"], outs["vector"])
+    np.testing.assert_array_equal(outs["golden"], src * 2)
+
+
+def test_run_app_returns_report_and_legacy_triple():
+    app = ALL_APPS["murmur3"]()
+    run = run_app(app)
+    res, vm, out = run                      # historical unpacking still works
+    assert res is run.result and vm is run.vm and out is run.dram
+    assert run.report.wall_s > 0 and run.report.stats["ticks"] > 0
+    assert run.report.cycles == vm.estimated_cycles()
+
+
+# ---------------------------------------------------------------------------
+# DataflowEngine over a CompiledProgram: compile once, serve many
+# ---------------------------------------------------------------------------
+
+def test_dataflow_engine_takes_compiled_program():
+    from repro.serve.dataflow import DataflowEngine, DataflowRequest
+    app = ALL_APPS["strlen"]()
+    compiled = revet.compile(app.fn, **app.dram_init, **app.params,
+                             **app.statics)
+    engines = [DataflowEngine(compiled) for _ in range(2)]
+    for eng in engines:
+        assert eng.result is compiled.result      # no recompilation
+        assert eng.backend is compiled.backend
+        for rid in range(2):
+            eng.submit(DataflowRequest(rid, app.params, app.dram_init))
+        for r in eng.drain():
+            for dram, want in app.expected.items():
+                np.testing.assert_array_equal(
+                    np.asarray(r.dram[dram])[:len(want)], want)
+            assert r.report.wall_s > 0 and r.stats["ticks"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: every Table III app through @revet.program, bit-identical to
+# the pre-redesign direct path, on both backends, with zero recompilation
+# on repeated calls.
+# ---------------------------------------------------------------------------
+
+def _direct_dram(app, backend):
+    """The pre-redesign path: compile_program + hand-built VectorVM."""
+    res = compile_program(app.prog)
+    vm = VectorVM(res.dfg, app.dram_init, backend=backend)
+    return vm.run(**app.params)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_apps_api_bit_identical_and_cached(name, backend, jax_jnp):
+    app = ALL_APPS[name]()
+    be = jax_jnp if backend == "jax" else "numpy"
+    app.fn.clear_cache()
+    run1 = run_app(app, backend=be)
+    assert run1.report.cache_hit is False
+    want = _direct_dram(app, be)
+    for k in want:
+        np.testing.assert_array_equal(
+            run1.dram[k], want[k],
+            err_msg=f"{name}[{backend}]: dram '{k}' diverged from the "
+                    "pre-redesign path")
+    # repeated call with unchanged shapes: zero recompilation
+    run2 = run_app(app, backend=be)
+    assert run2.report.cache_hit is True
+    assert run2.execution.compiled is run1.execution.compiled
+    ci = app.fn.cache_info()
+    assert ci.misses == 1 and ci.hits == 1, f"{name}: recompiled ({ci})"
+    for k in want:
+        np.testing.assert_array_equal(run2.dram[k], want[k])

@@ -12,8 +12,9 @@ import pytest
 from repro.apps import ALL_APPS
 from repro.apps.common import run_app
 from repro.core import ir
-from repro.core.backend import (JaxBackend, NumpyBackend, _scalar_red,
-                                make_backend, segment_reduce_window_np)
+from repro.core.backend import (JaxBackend, NumpyBackend, make_backend,
+                                segment_reduce_reference,
+                                segment_reduce_window_np)
 from repro.core.compiler import CompileOptions, compile_program
 from repro.core.vector_vm import VectorVM
 
@@ -36,31 +37,9 @@ NB = NumpyBackend()
 # historical per-token loop it replaced.
 # ---------------------------------------------------------------------------
 
-def _loop_reduce(kinds, vals, op, init, acc, group_open):
-    """The original `_reduce_out` per-token loop — pinned here as the
-    semantic reference for the vectorized implementation."""
-    out_kinds, out_vals = [], []
-    for i in range(len(kinds)):
-        k = int(kinds[i])
-        if k == 0:
-            if vals is not None:
-                acc = _scalar_red(op, acc, int(vals[i]))
-            group_open = True
-        elif k == 1:
-            out_kinds.append(0)
-            out_vals.append(acc)
-            acc = init
-            group_open = False
-        else:
-            if group_open:
-                out_kinds.append(0)
-                out_vals.append(acc)
-                acc = init
-                group_open = False
-            out_kinds.append(k - 1)
-            out_vals.append(0)
-    return (np.array(out_kinds, np.int64), np.array(out_vals, np.int64),
-            acc, group_open)
+# The original `_reduce_out` per-token loop, kept canonically in
+# core/backend.py as the semantic reference for the vectorized form.
+_loop_reduce = segment_reduce_reference
 
 
 def _rand_window(rng, n, max_bar=3):
