@@ -1,0 +1,62 @@
+"""Compile-pipeline benchmark: per-pass wall time + IR node-count deltas.
+
+``PYTHONPATH=src python -m benchmarks.run --only compile`` writes
+``BENCH_compile.json`` — one cell per Table III app, with the full
+:class:`~repro.core.pipeline.PipelineReport` breakdown.  Compile is the
+dominant cold-start cost the PR 2 cache amortizes; this is the trajectory
+file that makes it measurably improvable.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.apps import ALL_APPS
+from repro.core.compiler import CompileOptions, compile_program
+
+BENCH_JSON = "BENCH_compile.json"
+
+
+def compile_pipeline(rows: list[dict], out_path: str = BENCH_JSON) -> None:
+    apps: dict[str, dict] = {}
+    opts = CompileOptions()
+    for name in sorted(ALL_APPS):
+        app = ALL_APPS[name]()
+        compile_program(app.prog, opts)              # warm (imports, caches)
+        t0 = time.perf_counter()
+        res = compile_program(app.prog, opts)
+        total_s = time.perf_counter() - t0
+        rep = res.report
+        passes = [{
+            "name": r.name,
+            "wall_ms": round(r.wall_s * 1e3, 3),
+            "stmts": [r.stmts_before, r.stmts_after],
+            "exprs": [r.exprs_before, r.exprs_after],
+            **({"stats": r.stats} if r.stats else {}),
+        } for r in rep.records]
+        slowest = max(rep.records, key=lambda r: r.wall_s)
+        cell = {
+            "compile_ms": round(total_s * 1e3, 3),
+            "passes_ms": round(rep.total_wall_s * 1e3, 3),
+            "lowering_ms": round((total_s - rep.total_wall_s) * 1e3, 3),
+            "slowest_pass": slowest.name,
+            "final_stmts": rep.records[-1].stmts_after,
+            "final_exprs": rep.records[-1].exprs_after,
+            "passes": passes,
+        }
+        apps[name] = cell
+        rows.append({"bench": "compile", "name": name,
+                     "compile_ms": cell["compile_ms"],
+                     "slowest_pass": cell["slowest_pass"],
+                     "final_stmts": cell["final_stmts"]})
+    payload = {
+        "meta": {
+            "pipeline": opts.pipeline_spec(),
+            "note": "per-pass wall time + IR node deltas (warm second "
+                    "compile); lowering_ms is CFG->dataflow after passes",
+        },
+        "apps": apps,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")

@@ -6,6 +6,8 @@ the executor-backend suite.
         BENCH_vectorvm.json (per-app numpy vs jax backend timings)
     PYTHONPATH=src python -m benchmarks.run --only api        # writes
         BENCH_api.json (front-end dispatch overhead vs direct VectorVM)
+    PYTHONPATH=src python -m benchmarks.run --only compile    # writes
+        BENCH_compile.json (per-pass wall time + IR node deltas per app)
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark cell.
 """
@@ -20,11 +22,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table4,table5,fig12,fig13,"
-                         "fig14,roofline,vectorvm,micro,api")
+                         "fig14,roofline,vectorvm,micro,api,compile")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import api_bench, backends, figures, roofline, tables
+    from . import (api_bench, backends, compile_bench, figures, roofline,
+                   tables)
     benches = {
         "table3": tables.table3_apps,
         "table4": tables.table4_resources,
@@ -36,6 +39,7 @@ def main() -> None:
         "vectorvm": backends.vectorvm_backends,
         "micro": backends.reduce_micro,
         "api": api_bench.api_dispatch,
+        "compile": compile_bench.compile_pipeline,
     }
     if only:
         unknown = only - set(benches)

@@ -1,0 +1,117 @@
+"""Inspecting the compiler: dump the IR after every pipeline pass.
+
+    PYTHONPATH=src python examples/inspect_pipeline.py            # dump
+    PYTHONPATH=src python examples/inspect_pipeline.py --check    # CI smoke
+    PYTHONPATH=src python examples/inspect_pipeline.py --update   # regolden
+
+The dump is deterministic (pass naming uses counters, never object ids), so
+CI diffs it against the checked-in golden ``examples/golden/
+inspect_pipeline.txt`` — any unintended change to what a pass emits fails
+the build.  Wall-clock numbers are deliberately excluded from the dump.
+
+Also demonstrated: a user pass registered through ``revet.register_pass``
+slots into the same registry as the builtin pipeline and runs from a
+``pipeline=`` spec next to the in-tree ``constant-fold`` plugin.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+import revet
+from repro.core.machine import map_graph
+
+GOLDEN = Path(__file__).parent / "golden" / "inspect_pipeline.txt"
+
+
+@revet.program(outputs={"lengths": "offsets"})
+def strlen(b, input, offsets, lengths, *, count):
+    """The paper's running example (Fig. 7): demand-fetched strlen."""
+    with b.foreach(count) as (t, i):
+        off = t.let(t.dram_load(offsets, i))
+        n = t.let(0, "len")
+        it = t.read_it(input, off, tile=16)
+        with t.while_(lambda h: h.deref(it) != 0) as w:
+            w.set(n, n + 1)
+            w.advance(it)
+        t.dram_store(lengths, i, n)
+
+
+@revet.register_pass("annotate-stmt-count", requires=("no-sugar",),
+                     replace=True)
+def annotate_stmt_count(prog, ctx):
+    """A do-nothing user pass: counts statements into the pipeline report."""
+    from repro.core import ir
+    ctx.stat("stmts", sum(1 for _ in ir.walk(prog.main.body)))
+    return prog
+
+
+def build_dump() -> str:
+    lines: list[str] = []
+    emit = lines.append
+
+    spec = (revet.DEFAULT_PIPELINE
+            .replace(",infer-widths",
+                     ",constant-fold,annotate-stmt-count,infer-widths"))
+    emit(f"pipeline: {spec}")
+    emit("")
+
+    traced = strlen.trace(revet.spec(64, "i8"), revet.spec(4), count=4)
+    # a callable hook collects without printing; the report keeps every text
+    pm = revet.PassManager(spec, verify_each=True,
+                           print_ir_after=lambda name, text: None)
+    lowered_ir, report = pm.run(traced.prog.ir)
+
+    for r in report.records:
+        stats = "".join(f" {k}={v}" for k, v in sorted(r.stats.items()))
+        emit(f"== {r.name}: stmts {r.stmts_before}->{r.stmts_after} "
+             f"exprs {r.exprs_before}->{r.exprs_after}{stats} ==")
+    for name, text in report.ir_texts:
+        emit("")
+        emit(f"// ----- IR after {name} -----")
+        emit(text.rstrip("\n"))
+
+    # the plugin pass pays for itself: mapped resources shrink
+    base = strlen.lower(revet.spec(64, "i8"), revet.spec(4), count=4)
+    fold = strlen.lower(revet.spec(64, "i8"), revet.spec(4), count=4,
+                        pipeline=spec)
+    rb = map_graph(base.result.dfg, base.result.widths)
+    rf = map_graph(fold.result.dfg, fold.result.widths)
+    emit("")
+    emit(f"mapped resources default:  CU={rb.cu} MU={rb.mu} AG={rb.ag}")
+    emit(f"mapped resources +plugins: CU={rf.cu} MU={rf.mu} AG={rf.ag}")
+    return "\n".join(lines) + "\n"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="diff the dump against the checked-in golden")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the golden file")
+    args = ap.parse_args()
+    dump = build_dump()
+    if args.update:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(dump)
+        print(f"wrote {GOLDEN} ({len(dump.splitlines())} lines)")
+        return 0
+    if args.check:
+        want = GOLDEN.read_text()
+        if dump != want:
+            import difflib
+            sys.stderr.write("".join(difflib.unified_diff(
+                want.splitlines(True), dump.splitlines(True),
+                "golden", "current")))
+            print("inspect_pipeline: dump diverged from golden "
+                  f"({GOLDEN}); run with --update if intended",
+                  file=sys.stderr)
+            return 1
+        print(f"inspect_pipeline: dump matches golden "
+              f"({len(dump.splitlines())} lines)")
+        return 0
+    print(dump, end="")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

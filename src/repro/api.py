@@ -30,7 +30,7 @@ At call time real numpy arrays are passed positionally (or by name); DRAM
 declarations — names, sizes, dtypes — are inferred from the arguments,
 output arrays are declared from the ``outputs=`` spec and returned as arrays.
 Each distinct (shapes, dtypes, statics, resolved output sizes,
-CompileOptions, backend) signature compiles once into a
+pipeline spec, backend) signature compiles once into a
 :class:`CompiledProgram` — which holds the DFG, the post-pass IR, subword
 widths, and a live :class:`~repro.core.backend.ExecutorBackend` instance, so
 one Pallas jit cache serves every invocation — and lands in a per-function
@@ -63,17 +63,22 @@ from .core.backend import ExecutorBackend, make_backend
 from .core.compiler import CompileOptions, CompileResult, compile_program
 from .core.golden import Golden
 from .core.lang import Prog
+from .core.pipeline import (PassManager, PipelineReport, available_passes,
+                            register_pass)
 from .core.token_vm import TokenVM
 from .core.vector_vm import VectorVM
+from .core.verifier import VerificationError, verify_program
 
 __all__ = [
     "ArraySpec", "CacheInfo", "CompiledProgram", "Execution", "Lowered",
-    "ProgramFn", "RunReport", "Traced", "cache_info", "clear_cache",
-    "compile", "lower", "program", "spec", "trace",
+    "PassManager", "PipelineReport", "ProgramFn", "RunReport", "Traced",
+    "VerificationError", "available_passes", "cache_info", "clear_cache",
+    "compile", "lower", "program", "register_pass", "spec", "trace",
+    "verify_program",
 ]
 
 # call-time keyword names claimed by the API itself (never scalar params)
-_RESERVED_KWARGS = ("options", "backend", "executor", "vm_kwargs")
+_RESERVED_KWARGS = ("options", "backend", "executor", "vm_kwargs", "pipeline")
 
 _NP_DTYPE = {1: "i8", 2: "i16"}  # itemsize -> DRAM dtype ("i32" otherwise)
 
@@ -182,6 +187,17 @@ def _bind_call(name: str, in_names: Sequence[str], args: tuple, kwargs: dict,
     return arrays, scalars, statics
 
 
+def _verify_cached(compiled: "CompiledProgram",
+                   options: CompileOptions) -> None:
+    """``verify_each`` is not part of the cache key (it doesn't change the
+    compiled artifact), so a hit that was compiled unverified is verified
+    after the fact — once; the report then remembers it."""
+    if options.verify_each:
+        rep = compiled.result.report
+        if rep is None or not rep.verified:
+            compiled.result.verify()
+
+
 # ---------------------------------------------------------------------------
 # Run reports
 # ---------------------------------------------------------------------------
@@ -233,8 +249,9 @@ class Traced:
     out_info: tuple[tuple[str, int, str], ...]   # (name, size, dtype)
     statics: dict[str, Any]
 
-    def lower(self, options: CompileOptions | None = None) -> "Lowered":
-        options = options or self.owner.options or CompileOptions()
+    def lower(self, options: CompileOptions | None = None,
+              pipeline: str | None = None) -> "Lowered":
+        options = self.owner._resolve_options(options, pipeline)
         return Lowered(self, options, compile_program(self.prog, options))
 
 
@@ -244,6 +261,16 @@ class Lowered:
     traced: Traced
     options: CompileOptions
     result: CompileResult
+
+    def as_text(self) -> str:
+        """Round-trip-stable textual form of the post-pass IR
+        (``ir.Program.as_text()``) — the printed compiler mid-state."""
+        return self.result.prog.as_text()
+
+    @property
+    def pipeline_report(self) -> "PipelineReport | None":
+        """Per-pass wall time + IR node-count deltas of this compile."""
+        return self.result.report
 
     def compile(self, backend: str | ExecutorBackend | None = None
                 ) -> "CompiledProgram":
@@ -257,6 +284,7 @@ class Lowered:
                               self.traced.statics, self.options, be)
         cached = owner._cache_get(key)
         if cached is not None:
+            _verify_cached(cached, self.options)
             return cached
         return owner._cache_put(key, self.result, be, self.traced.in_specs,
                                 self.traced.out_info,
@@ -375,13 +403,15 @@ class ProgramFn:
                  statics: Sequence[str] = (), name: str | None = None,
                  pools: dict[str, dict] | None = None,
                  options: CompileOptions | None = None,
-                 backend: str | ExecutorBackend | None = None):
+                 backend: str | ExecutorBackend | None = None,
+                 pipeline: str | None = None):
         self.fn = fn
         self.name = name or fn.__name__
         self.outputs = dict(outputs)
         self.pools = dict(pools or {})
         self.options = options
         self.backend = backend
+        self.pipeline = pipeline
         self.__doc__ = fn.__doc__
         self.__name__ = self.name
         self.__wrapped__ = fn
@@ -425,6 +455,20 @@ class ProgramFn:
         self._misses = 0
         _REGISTRY.add(self)
 
+    def _resolve_options(self, options: CompileOptions | None = None,
+                         pipeline: str | None = None) -> CompileOptions:
+        """Effective compile options: per-call > per-function defaults; a
+        ``pipeline=`` spec (call or decorator level) overrides the booleans'
+        synthesized pass sequence."""
+        opts = options or self.options or CompileOptions()
+        pl = pipeline if pipeline is not None else \
+            (self.pipeline if options is None or options.pipeline is None
+             else None)
+        if pl is not None:
+            pl = pl if isinstance(pl, str) else ",".join(pl)
+            opts = dataclasses.replace(opts, pipeline=pl)
+        return opts
+
     # -- binding -------------------------------------------------------------
     def _bind(self, args: tuple, kwargs: dict
               ) -> tuple[dict, dict[str, int], dict[str, Any]]:
@@ -464,11 +508,14 @@ class ProgramFn:
         return tuple(out)
 
     def _make_key(self, in_specs, out_info, statics, options, backend):
+        # the pipeline *spec* — not the CompileOptions flag tuple — keys the
+        # compile: boolean sugar and an explicit pipeline= that denote the
+        # same pass sequence share one entry; a custom pipeline misses
         return (tuple((n, s.shape, s.dtype)
                       for n, s in sorted(in_specs.items())),
                 out_info,
                 tuple(sorted(statics.items())),
-                dataclasses.astuple(options),
+                options.pipeline_spec(),
                 _backend_token(backend, options))
 
     # -- tracing -------------------------------------------------------------
@@ -533,13 +580,15 @@ class ProgramFn:
 
     def _get_compiled(self, in_specs, scalars, statics,
                       options: CompileOptions | None,
-                      backend) -> tuple[CompiledProgram, bool]:
-        options = options or self.options or CompileOptions()
+                      backend, pipeline: str | None = None
+                      ) -> tuple[CompiledProgram, bool]:
+        options = self._resolve_options(options, pipeline)
         out_info = self._resolve_outputs(in_specs, scalars, statics)
         be = backend if backend is not None else self.backend
         key = self._make_key(in_specs, out_info, statics, options, be)
         compiled = self._cache_get(key)
         if compiled is not None:
+            _verify_cached(compiled, options)
             return compiled, True
         prog = self._build_prog(in_specs, out_info, statics)
         result = compile_program(prog, options)
@@ -548,7 +597,7 @@ class ProgramFn:
 
     def run(self, *args, options: CompileOptions | None = None,
             backend: str | ExecutorBackend | None = None,
-            executor: str = "vector",
+            executor: str = "vector", pipeline: str | None = None,
             vm_kwargs: dict | None = None, **kwargs) -> Execution:
         """Full call path returning the :class:`Execution` (outputs + DRAM +
         VM + :class:`RunReport`); ``__call__`` is this, unpacked."""
@@ -564,7 +613,7 @@ class ProgramFn:
         arrays, scalars, statics = self._bind(args, kwargs)
         in_specs = {n: _abstractify(a) for n, a in arrays.items()}
         compiled, hit = self._get_compiled(in_specs, scalars, statics,
-                                           options, backend)
+                                           options, backend, pipeline)
         # config-keyed cache: on a hit, still honor the *caller's* backend
         # instance rather than the one bound at insertion time
         be_override = backend if isinstance(backend, ExecutorBackend) else None
@@ -581,8 +630,8 @@ class ProgramFn:
         return self.run(*args, executor=executor, **kwargs)
 
     def lower(self, *args, options: CompileOptions | None = None,
-              **kwargs) -> Lowered:
-        return self.trace(*args, **kwargs).lower(options)
+              pipeline: str | None = None, **kwargs) -> Lowered:
+        return self.trace(*args, **kwargs).lower(options, pipeline)
 
     # -- cache management ------------------------------------------------------
     def cache_info(self) -> CacheInfo:
@@ -603,19 +652,22 @@ def program(fn: Callable | None = None, *, outputs: dict,
             statics: Sequence[str] = (), name: str | None = None,
             pools: dict[str, dict] | None = None,
             options: CompileOptions | None = None,
-            backend: str | ExecutorBackend | None = None):
+            backend: str | ExecutorBackend | None = None,
+            pipeline: str | None = None):
     """Decorate a tracer function into an array-in/array-out
     :class:`ProgramFn`.
 
     ``outputs`` maps output-array parameter names to size specs (see
     :meth:`ProgramFn._resolve_outputs`); ``statics`` names keyword-only
     parameters that are trace-time constants; ``pools`` pre-declares SRAM
-    pools (``{"default": dict(buf_words=64, n_bufs=2048)}``); ``options`` and
-    ``backend`` set per-function defaults, overridable per call.
+    pools (``{"default": dict(buf_words=64, n_bufs=2048)}``); ``options``,
+    ``backend``, and ``pipeline`` (a textual pass-pipeline spec, see
+    DESIGN.md §6) set per-function defaults, overridable per call.
     """
     def wrap(f: Callable) -> ProgramFn:
         return ProgramFn(f, outputs=outputs, statics=statics, name=name,
-                         pools=pools, options=options, backend=backend)
+                         pools=pools, options=options, backend=backend,
+                         pipeline=pipeline)
     return wrap(fn) if fn is not None else wrap
 
 

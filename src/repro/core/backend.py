@@ -41,6 +41,21 @@ def _w32(a: np.ndarray) -> np.ndarray:
     return a.astype(np.uint32).astype(np.int32).astype(_I64)
 
 
+_INIT_MASK = {"i8": 0xFF, "i16": 0xFFFF}
+
+
+def wrap_dram_init(arr, dtype: str) -> np.ndarray:
+    """Normalize raw DRAM init values to the array's storage semantics
+    (i32 two's-complement wrap, i8/i16 masked) — the same rule the store
+    path applies.  Every executor wraps at init time so an unwrapped
+    >= 2**31 input reaches all lanes as the identical signed-32 value: the
+    jax route's kernels wrap at entry (``kernels/ops`` works on int32), and
+    without this the numpy oracle would see the raw int64 instead."""
+    a = np.asarray(arr, dtype=_I64).ravel()
+    m = _INIT_MASK.get(dtype)
+    return (a & m) if m is not None else _w32(a)
+
+
 # ---------------------------------------------------------------------------
 # Scalar + vector op tables (shared by backends and the TokenVM-style paths)
 # ---------------------------------------------------------------------------

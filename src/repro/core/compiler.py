@@ -2,25 +2,39 @@
 
     language (lang.Prog)
       -> structured IR (ir.Program)
-      -> [lower_memory_sugar]  views/iterators -> SRAM + control flow
-      -> [eliminate_hierarchy] pragma'd foreach -> fork + atomics
-      -> [if_to_select]        branch-free ifs -> selects (optional)
-      -> [fuse_allocations]    one allocation per block per pool (optional)
-      -> [insert_frees]        explicit free-list discipline
-      -> [hoist_allocators]    replicate allocator hoisting + bufferization
+      -> PassManager pipeline (core/pipeline.py; default spec below)
       -> CFG->dataflow lowering (lowering.py)
       -> link analysis / machine mapping (machine.py)
 
-``CompileOptions`` toggles individual optimization passes — the Fig. 12
-ablations flip these flags and compare mapped resources.
+The mid-section is driven by the pass-manager API: passes are registry
+entries executed from a textual pipeline spec.  ``CompileOptions`` is sugar
+over that spec — the Fig. 12 ablations flip the booleans, which merely
+drop the corresponding pass name from the synthesized pipeline — and
+``pipeline=`` overrides the spec wholesale (including user passes registered
+via ``revet.register_pass``):
+
+    DEFAULT_PIPELINE == CompileOptions().pipeline_spec()
+      == "lower-memory-sugar,insert-frees,eliminate-hierarchy,if-to-select,"
+         "fuse-allocations,hoist-allocators,infer-widths"
+
+``verify_each=True`` runs the structural verifier (core/verifier.py) on the
+IR after every pass and on the lowered DFG; every compile carries a
+:class:`~repro.core.pipeline.PipelineReport` (per-pass wall time + node
+deltas) on ``CompileResult.report``.
 """
 from __future__ import annotations
 
-import copy
 import dataclasses
 
-from . import ir, lowering, passes
+from . import ir, lowering
 from .dfg import DFG
+from .pipeline import (PassManager, PipelineReport, initial_invariants,
+                       normalize_spec)
+from .verifier import verify_dfg, verify_program
+
+DEFAULT_PIPELINE = ("lower-memory-sugar,insert-frees,eliminate-hierarchy,"
+                    "if-to-select,fuse-allocations,hoist-allocators,"
+                    "infer-widths")
 
 
 @dataclasses.dataclass
@@ -31,6 +45,32 @@ class CompileOptions:
     subword_packing: bool = True     # §V-B(d) — affects machine accounting
     eliminate_hierarchy: bool = True # §V-A(b) — honors pragma annotations
     backend: str = "numpy"           # VectorVM executor backend (core/backend)
+    pipeline: str | None = None      # explicit pipeline spec (overrides the
+                                     # booleans; see pipeline_spec())
+    verify_each: bool = False        # structural verifier after every pass
+
+    def pipeline_spec(self) -> str:
+        """The pipeline this option set denotes — an explicit ``pipeline``
+        verbatim (normalized), else the spec the booleans synthesize.  This
+        string is what the front-end compile cache keys on."""
+        if self.pipeline is not None:
+            return normalize_spec(self.pipeline)
+        names = ["lower-memory-sugar", "insert-frees"]
+        if self.eliminate_hierarchy:
+            names.append("eliminate-hierarchy")
+        if self.if_to_select:
+            names.append("if-to-select")
+        if self.fuse_allocations:
+            names.append("fuse-allocations")
+        if self.hoist_allocators:
+            names.append("hoist-allocators")
+        if self.subword_packing:
+            names.append("infer-widths")
+        return ",".join(names)
+
+    def pass_manager(self, **pm_kwargs) -> PassManager:
+        pm_kwargs.setdefault("verify_each", self.verify_each)
+        return PassManager(self.pipeline_spec(), **pm_kwargs)
 
 
 @dataclasses.dataclass
@@ -39,32 +79,47 @@ class CompileResult:
     prog: ir.Program                 # post-pass IR (golden-executable)
     widths: dict[str, int]
     options: CompileOptions
+    report: PipelineReport | None = None    # per-pass instrumentation
+
+    def as_text(self) -> str:
+        """Round-trip-stable textual form of the post-pass IR."""
+        return self.prog.as_text()
+
+    def verify(self) -> "CompileResult":
+        """Verify this (possibly cached) compile after the fact: structural
+        checks on the post-pass IR plus the DFG-level link/register checks.
+        Used by the front-end when ``verify_each=True`` hits a compile-cache
+        entry that was built without verification."""
+        verify_program(self.prog, initial_invariants(self.prog),
+                       stage="cached-compile")
+        verify_dfg(self.dfg)
+        if self.report is not None:
+            self.report.verified = True
+        return self
 
 
-def run_passes(prog: ir.Program, opts: CompileOptions | None = None
+def run_passes(prog: ir.Program, opts: CompileOptions | None = None,
+               pm: PassManager | None = None,
                ) -> tuple[ir.Program, dict[str, int]]:
+    """Run the optimization pipeline; returns (post-pass IR, widths).
+
+    Kept as the historical two-tuple entry point; pipeline-aware callers use
+    ``opts.pass_manager().run(prog)`` or :func:`compile_program` (whose
+    result carries the full :class:`PipelineReport`)."""
     opts = opts or CompileOptions()
-    prog = copy.deepcopy(prog)
-    passes.lower_memory_sugar(prog)
-    # frees first: eliminate_hierarchy moves scope-end flushes *and frees*
-    # into the last forked child (Fig. 9 discipline)
-    passes.insert_frees(prog)
-    if opts.eliminate_hierarchy:
-        passes.eliminate_hierarchy(prog)
-    if opts.if_to_select:
-        passes.if_to_select(prog)
-    if opts.fuse_allocations:
-        passes.fuse_allocations(prog)
-    if opts.hoist_allocators:
-        passes.hoist_allocators(prog)
-    widths = passes.infer_widths(prog) if opts.subword_packing else {}
-    return prog, widths
+    pm = pm or opts.pass_manager()
+    out, report = pm.run(prog)
+    return out, report.widths
 
 
-def compile_program(prog, opts: CompileOptions | None = None) -> CompileResult:
+def compile_program(prog, opts: CompileOptions | None = None, *,
+                    print_ir_after=False) -> CompileResult:
     """Accepts a ``lang.Prog`` or an ``ir.Program``."""
     opts = opts or CompileOptions()
     base = prog.ir if hasattr(prog, "ir") else prog
-    lowered_ir, widths = run_passes(base, opts)
+    pm = opts.pass_manager(print_ir_after=print_ir_after)
+    lowered_ir, report = pm.run(base, options=opts)
     dfg = lowering.lower(lowered_ir)
-    return CompileResult(dfg, lowered_ir, widths, opts)
+    if opts.verify_each:
+        verify_dfg(dfg)
+    return CompileResult(dfg, lowered_ir, report.widths, opts, report)

@@ -97,8 +97,9 @@ class Golden:
         for name, decl in program.dram.items():
             self.dram[name] = np.zeros(decl.size, dtype=np.int64)
         if dram_init:
+            from .backend import wrap_dram_init
             for name, arr in dram_init.items():
-                a = np.asarray(arr, dtype=np.int64).ravel()
+                a = wrap_dram_init(arr, program.dram[name].dtype)
                 self.dram[name][: a.size] = a
         self.stats: collections.Counter = collections.Counter()
         # per-thread (stmts, loop_iters) profile — feeds the SIMT-divergence
@@ -106,6 +107,18 @@ class Golden:
         self.thread_profile: list[tuple[int, int]] = []
         # memory-object tables (handle name -> object); names are unique
         self._objs: dict[str, Any] = {}
+        # pool-backed scratchpads: SRAM pointers are first-class *values*
+        # (the hierarchy-elimination rewrite uses them as DRAM addresses,
+        # Fig. 9), handed out from per-pool free lists like the VMs do.
+        # Unlike the VMs the oracle never deadlocks: an exhausted pool grows.
+        self.pool_mem: dict[str, np.ndarray] = {}
+        self.pool_free: dict[str, collections.deque] = {}
+        for name, pool in program.pools.items():
+            self.pool_mem[name] = np.zeros(pool.n_bufs * pool.buf_words,
+                                           dtype=np.int64)
+            self.pool_free[name] = collections.deque(range(pool.n_bufs))
+        self._buf_pool: dict[str, str] = {}     # SRAMDecl var -> pool name
+        self._buf_size: dict[str, int] = {}     # SRAMDecl var -> words
 
     # -- DRAM access ----------------------------------------------------------
     def _mask(self, arr: str, v: int) -> int:
@@ -124,6 +137,39 @@ class Golden:
         self.stats["dram_write_elems"] += 1
         if 0 <= addr < a.size:
             a[addr] = self._mask(arr, v)
+
+    # -- SRAM pools -----------------------------------------------------------
+    def _sram_alloc(self, s: SRAMDecl) -> int:
+        pool = self.prog.pools[s.pool]
+        if s.size > pool.buf_words:
+            # the VM would silently alias the neighboring buffer; the oracle
+            # rejects the program instead (the verifier flags it too)
+            raise ValueError(
+                f"SRAM buffer '{s.var}' ({s.size} words) exceeds pool "
+                f"'{s.pool}' buffer size ({pool.buf_words} words)")
+        fl = self.pool_free[s.pool]
+        if not fl:
+            # grow instead of stalling: the oracle defines semantics, the
+            # VMs model the finite-resource back-pressure (Fig. 14)
+            mem = self.pool_mem[s.pool]
+            n = mem.size // pool.buf_words
+            self.pool_mem[s.pool] = np.concatenate(
+                [mem, np.zeros(n * pool.buf_words, dtype=np.int64)])
+            fl.extend(range(n, 2 * n))
+        ptr = fl.popleft()
+        self._buf_pool[s.var] = s.pool
+        self._buf_size[s.var] = s.size
+        base = ptr * pool.buf_words
+        self.pool_mem[s.pool][base: base + pool.buf_words] = 0
+        return ptr
+
+    def _sram_addr(self, buf: str, idx: int, env: _Env) -> "int | None":
+        """Pool-memory address of ``buf[idx]``, or None when out of bounds
+        (loads read 0, stores drop — the historical per-buffer semantics;
+        indices never alias a neighboring buffer)."""
+        if not 0 <= idx < self._buf_size[buf]:
+            return None
+        return env[buf] * self.prog.pools[self._buf_pool[buf]].buf_words + idx
 
     # -- entry point ------------------------------------------------------------
     def run(self, **params: int) -> dict[str, np.ndarray]:
@@ -156,22 +202,23 @@ class Golden:
         if isinstance(s, Assign):
             env[s.var] = eval_expr(s.expr, env)
         elif isinstance(s, SRAMDecl):
-            self._objs[s.var] = np.zeros(s.size, dtype=np.int64)
+            env[s.var] = self._sram_alloc(s)
             self.stats["sram_allocs"] += 1
         elif isinstance(s, ir.SRAMFree):
+            self.pool_free[self._buf_pool[s.var]].append(env[s.var])
             self.stats["sram_frees"] += 1
         elif isinstance(s, SRAMLoad):
-            buf = self._objs[s.buf]
-            idx = eval_expr(s.idx, env)
-            env[s.var] = int(buf[idx]) if 0 <= idx < buf.size else 0
+            addr = self._sram_addr(s.buf, eval_expr(s.idx, env), env)
+            env[s.var] = (int(self.pool_mem[self._buf_pool[s.buf]][addr])
+                          if addr is not None else 0)
             self.stats["sram_reads"] += 1
         elif isinstance(s, SRAMStore):
             if s.pred is not None and eval_expr(s.pred, env) == 0:
                 return None
-            buf = self._objs[s.buf]
-            idx = eval_expr(s.idx, env)
-            if 0 <= idx < buf.size:
-                buf[idx] = wrap32(eval_expr(s.val, env))
+            addr = self._sram_addr(s.buf, eval_expr(s.idx, env), env)
+            if addr is not None:
+                self.pool_mem[self._buf_pool[s.buf]][addr] = \
+                    wrap32(eval_expr(s.val, env))
             self.stats["sram_writes"] += 1
         elif isinstance(s, DRAMLoad):
             env[s.var] = self._dram_read(s.arr, eval_expr(s.addr, env))

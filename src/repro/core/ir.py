@@ -359,6 +359,58 @@ class ItWrite(Stmt):
     last: Optional[Expr] = None   # ManualWriteIt: flush flag (§V-A(a))
 
 
+# Expression-valued fields per statement class, in declaration order.  The
+# textual printer (textio.py), the verifier, and expression-rewriting passes
+# (e.g. constant folding) all traverse statements through this table, so a new
+# statement class only has to be added here once.
+EXPR_FIELDS: dict[type, tuple[str, ...]] = {
+    Assign: ("expr",),
+    SRAMDecl: (),
+    SRAMFree: (),
+    SRAMLoad: ("idx",),
+    SRAMStore: ("idx", "val", "pred"),
+    DRAMLoad: ("addr",),
+    DRAMStore: ("addr", "val", "pred"),
+    AtomicAdd: ("addr", "delta"),
+    If: ("cond",),
+    While: ("cond",),
+    Foreach: ("lo", "hi", "step"),
+    Yield: ("expr",),
+    Fork: ("count",),
+    Exit: (),
+    Replicate: (),
+    ViewDecl: ("base",),
+    ViewLoad: ("idx",),
+    ViewStore: ("idx", "val"),
+    ReadItDecl: ("seek",),
+    ItDeref: ("ahead",),
+    ItAdvance: ("amount",),
+    WriteItDecl: ("seek",),
+    ItWrite: ("val", "last"),
+}
+
+
+def stmt_exprs(s: Stmt) -> list[Expr]:
+    """All (non-None) expression operands of one statement, shallow."""
+    return [e for f in EXPR_FIELDS[type(s)]
+            if (e := getattr(s, f)) is not None]
+
+
+def map_stmt_exprs(s: Stmt, fn) -> None:
+    """Rewrite every expression operand of ``s`` in place with ``fn``."""
+    for f in EXPR_FIELDS[type(s)]:
+        e = getattr(s, f)
+        if e is not None:
+            setattr(s, f, fn(e))
+
+
+def expr_size(e: Expr) -> int:
+    """Number of nodes in an expression tree."""
+    if e.op in ("const", "var"):
+        return 1
+    return 1 + sum(expr_size(a) for a in e.args)
+
+
 # ---------------------------------------------------------------------------
 # Program container
 # ---------------------------------------------------------------------------
@@ -397,6 +449,23 @@ class Program:
 
     def pool_decl(self, name: str, buf_words: int = 64, n_bufs: int = 1024) -> None:
         self.pools[name] = SRAMPool(name, buf_words, n_bufs)
+
+    def as_text(self) -> str:
+        """Round-trip-stable textual form (see :mod:`repro.core.textio`):
+        ``textio.parse_program(p.as_text())`` rebuilds an equal program and
+        prints back to the identical text."""
+        from .textio import program_to_text
+        return program_to_text(self)
+
+    def node_count(self) -> dict[str, int]:
+        """IR size metrics (statements + expression nodes) — the per-pass
+        delta reported by :class:`repro.core.pipeline.PipelineReport`."""
+        stmts = exprs = 0
+        if self.main:
+            for s in walk(self.main.body):
+                stmts += 1
+                exprs += sum(expr_size(e) for e in stmt_exprs(s))
+        return {"stmts": stmts, "exprs": exprs}
 
 
 # ---------------------------------------------------------------------------

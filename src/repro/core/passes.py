@@ -316,14 +316,14 @@ def _convertible(stmts: list[ir.Stmt], defined: set[str]) -> bool:
     return True
 
 
-def _predicate(stmts: list[ir.Stmt], pred: Expr) -> list[ir.Stmt]:
+def _predicate(stmts: list[ir.Stmt], pred: Expr, nm: _Namer) -> list[ir.Stmt]:
     out: list[ir.Stmt] = []
     for s in stmts:
         if isinstance(s, Assign):
             out.append(Assign(s.var, Expr("select", (pred, s.expr,
                                                      var(s.var)))))
         elif isinstance(s, (SRAMLoad, DRAMLoad)):
-            tmp = f"%sel_{id(s) & 0xFFFF}_{s.var}"
+            tmp = nm(f"v_{s.var.lstrip('%')}_")
             if isinstance(s, SRAMLoad):
                 out.append(SRAMLoad(tmp, s.buf, s.idx))
             else:
@@ -350,6 +350,7 @@ def if_to_select(prog: ir.Program) -> ir.Program:
     """Inline branch-free if statements: conditional moves + predicated
     stores. "More powerful than MLIR's default of only rewriting empty ifs"
     — we convert any straight-line branch."""
+    nm = _Namer("ifc")
 
     def rewrite(stmts: list[ir.Stmt], defined: set[str]) -> list[ir.Stmt]:
         out: list[ir.Stmt] = []
@@ -360,10 +361,10 @@ def if_to_select(prog: ir.Program) -> ir.Program:
                 s.els = rewrite(s.els, set(defined))
                 if _convertible(s.then, defined) and \
                         _convertible(s.els, defined):
-                    p = f"%ifc_{id(s) & 0xFFFFF}"
+                    p = nm("p")
                     out.append(Assign(p, s.cond))
-                    out.extend(_predicate(s.then, var(p)))
-                    out.extend(_predicate(s.els, Expr("not", (var(p),))))
+                    out.extend(_predicate(s.then, var(p), nm))
+                    out.extend(_predicate(s.els, Expr("not", (var(p),)), nm))
                     for b in (s.then, s.els):
                         for st in b:
                             defined |= _uses_defs_shallow(st)[1]
@@ -416,6 +417,7 @@ def fuse_allocations(prog: ir.Program) -> ir.Program:
             by_pool.setdefault(d.pool, []).append(d)
         remap: dict[str, tuple[str, int]] = {}
         sizes: dict[str, int] = {}
+        repool: dict[str, str] = {}     # lead var -> fused pool name
         for pool, group in by_pool.items():
             if len(group) < 2:
                 continue
@@ -425,6 +427,7 @@ def fuse_allocations(prog: ir.Program) -> ir.Program:
                 remap[d.var] = (lead.var, off)
                 off += d.size
             sizes[lead.var] = off
+            repool[lead.var] = f"{pool}_f{off}"
         if not remap:
             new = []
             for s in stmts:
@@ -447,6 +450,9 @@ def fuse_allocations(prog: ir.Program) -> ir.Program:
                 continue
             if isinstance(s, SRAMFree) and s.var in remap:
                 continue
+            if isinstance(s, SRAMFree) and s.var in repool:
+                out.append(SRAMFree(s.var, repool[s.var]))
+                continue
             if isinstance(s, SRAMLoad) and s.buf in remap:
                 lead, off = remap[s.buf]
                 out.append(SRAMLoad(s.var, lead,
@@ -458,11 +464,11 @@ def fuse_allocations(prog: ir.Program) -> ir.Program:
                     s, buf=lead, idx=Expr("add", (s.idx, const(off)))))
                 continue
             for blk in ir.child_blocks(s):
-                blk[:] = _substitute(rewrite(blk), remap)
+                blk[:] = _substitute(rewrite(blk), remap, repool)
             out.append(s)
-        return _substitute(out, remap)
+        return _substitute(out, remap, repool)
 
-    def _substitute(stmts, remap):
+    def _substitute(stmts, remap, repool):
         out = []
         for s in stmts:
             if isinstance(s, SRAMLoad) and s.buf in remap:
@@ -474,9 +480,11 @@ def fuse_allocations(prog: ir.Program) -> ir.Program:
                                         idx=Expr("add", (s.idx, const(off))))
             elif isinstance(s, SRAMFree) and s.var in remap:
                 continue
+            elif isinstance(s, SRAMFree) and s.var in repool:
+                s = SRAMFree(s.var, repool[s.var])
             else:
                 for blk in ir.child_blocks(s):
-                    blk[:] = _substitute(blk, remap)
+                    blk[:] = _substitute(blk, remap, repool)
             out.append(s)
         return out
 

@@ -88,8 +88,9 @@ class TokenVM:
             name: np.zeros(decl.size, dtype=np.int64)
             for name, decl in g.dram.items()}
         if dram_init:
+            from .backend import wrap_dram_init
             for name, arr in dram_init.items():
-                a = np.asarray(arr, dtype=np.int64).ravel()
+                a = wrap_dram_init(arr, g.dram[name].dtype)
                 self.dram[name][: a.size] = a
         self.pools: dict[str, np.ndarray] = {}
         self.free_lists: dict[str, collections.deque] = {}

@@ -44,7 +44,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import ir
-from .backend import ExecutorBackend, _w32, make_backend
+from .backend import ExecutorBackend, _w32, make_backend, wrap_dram_init
 from .dfg import (DFG, BodyOp, Context, CounterHead, ForwardMergeHead,
                   FwdBwdMergeHead, SingleHead, SourceHead, ZipHead)
 
@@ -147,7 +147,7 @@ class VectorVM:
             name: np.zeros(d.size, _I64) for name, d in g.dram.items()}
         if dram_init:
             for name, arr in dram_init.items():
-                a = np.asarray(arr, dtype=_I64).ravel()
+                a = wrap_dram_init(arr, g.dram[name].dtype)
                 self.dram[name][: a.size] = a
         self.pools: dict[str, np.ndarray] = {}
         self.free_lists: dict[str, collections.deque] = {}

@@ -353,6 +353,13 @@ def _pallas_segred_add(kinds, vals, init: int, acc: int, group_open: bool,
     2^24, so ``(hi << 16) + lo`` recombines the exact 32-bit wrapped sum.
     The carried accumulator enters as a prepended data token of value
     ``wrap32(acc - init)`` — it both seeds segment 0 and marks the group open.
+
+    Block-count guard: the half-sum bound only holds while one kernel call
+    sees at most ``DEFAULT_BLOCK`` tokens per segment (256 * 0xFFFF < 2^24).
+    A window that would span multiple blocks is rejected here —
+    :func:`vm_segment_reduce` re-splits such windows into block-sized chunks
+    and carries the accumulator exactly (host-side int) between them, so
+    ``vlen > 256`` segments cannot silently go inexact on the Pallas route.
     """
     k = np.asarray(kinds, np.int32)
     v = np.asarray(vals, _I64)
@@ -361,6 +368,11 @@ def _pallas_segred_add(kinds, vals, init: int, acc: int, group_open: bool,
         v = np.concatenate([_vm_wrap32(np.asarray([acc - init])), v])
     n = len(k)
     block = _sr.DEFAULT_BLOCK
+    if n > block:
+        raise ValueError(
+            f"_pallas_segred_add: window of {n} tokens exceeds one "
+            f"{block}-token block; the f32 16-bit-half trick is only exact "
+            "within a single block — use vm_segment_reduce, which re-splits")
     pad = (-n) % block
     if pad:   # identity data tokens: no emissions, tail carry is host-side
         k = np.concatenate([k, np.zeros(pad, np.int32)])
@@ -427,12 +439,30 @@ def vm_segment_reduce(kinds, vals, op: str, init: int, acc: int,
     if vals is None or op not in covered or degenerate:
         return segment_reduce_window_np(kinds, vals, op, init, acc,
                                         group_open)
-    new_acc, new_open = _vm_segred_carry(kinds, vals, op, init, acc,
-                                         group_open)
     if route == "pallas":
-        out_k, out_v = _pallas_segred_add(kinds, vals, init, acc, group_open,
-                                          interpret)
+        # carry re-split: at most block-1 tokens per kernel call (plus the
+        # prepended carry token) keeps every per-segment half-sum exact; the
+        # inter-chunk accumulator is exact host-side int bookkeeping, so
+        # arbitrarily long segments (vlen > 256) stay bit-correct.  The last
+        # chunk's carry *is* the whole window's.
+        kinds = np.asarray(kinds, _I64)
+        vals = np.asarray(vals, _I64)
+        limit = _sr.DEFAULT_BLOCK - 1
+        ks, vs = [], []
+        new_acc, new_open = acc, group_open
+        for s0 in range(0, len(kinds), limit):
+            ck, cv = kinds[s0:s0 + limit], vals[s0:s0 + limit]
+            k_, v_ = _pallas_segred_add(ck, cv, init, new_acc, new_open,
+                                        interpret)
+            new_acc, new_open = _vm_segred_carry(ck, cv, "add", init,
+                                                 new_acc, new_open)
+            ks.append(k_)
+            vs.append(v_)
+        out_k = np.concatenate(ks) if ks else np.zeros(0, _I64)
+        out_v = np.concatenate(vs) if vs else np.zeros(0, _I64)
     else:
+        new_acc, new_open = _vm_segred_carry(kinds, vals, op, init, acc,
+                                             group_open)
         n = len(kinds)
         m = _vm_pad_len(n)
         o, c = _vm_segred(op)(

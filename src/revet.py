@@ -1,18 +1,24 @@
 """``import revet`` — the user-facing namespace for the Revet front-end.
 
 Re-exports :mod:`repro.api` (the ``@revet.program`` decorator, AOT
-``trace``/``lower``/``compile`` stages, and compile-cache management) plus
-the handful of language/compiler names a program author needs.
+``trace``/``lower``/``compile`` stages, compile-cache management, and the
+pass-pipeline surface: ``revet.register_pass`` slots user passes into the
+same registry the builtin pipeline runs from) plus the handful of
+language/compiler names a program author needs.
 """
 from repro.api import (ArraySpec, CacheInfo, CompiledProgram, Execution,
-                       Lowered, ProgramFn, RunReport, Traced, cache_info,
-                       clear_cache, compile, lower, program, spec, trace)
-from repro.core.compiler import CompileOptions
+                       Lowered, PassManager, PipelineReport, ProgramFn,
+                       RunReport, Traced, VerificationError, available_passes,
+                       cache_info, clear_cache, compile, lower, program,
+                       register_pass, spec, trace, verify_program)
+from repro.core.compiler import DEFAULT_PIPELINE, CompileOptions
 from repro.core.lang import Block, E, Prog, c, select
 
 __all__ = [
     "ArraySpec", "Block", "CacheInfo", "CompileOptions", "CompiledProgram",
-    "E", "Execution", "Lowered", "Prog", "ProgramFn", "RunReport", "Traced",
-    "c", "cache_info", "clear_cache", "compile", "lower", "program",
-    "select", "spec", "trace",
+    "DEFAULT_PIPELINE", "E", "Execution", "Lowered", "PassManager",
+    "PipelineReport", "Prog", "ProgramFn", "RunReport", "Traced",
+    "VerificationError", "available_passes", "c", "cache_info",
+    "clear_cache", "compile", "lower", "program", "register_pass", "select",
+    "spec", "trace", "verify_program",
 ]

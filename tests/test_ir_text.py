@@ -1,0 +1,108 @@
+"""Textual IR (core/textio.py): round-trip stability of the printer the
+pipeline instrumentation and the golden-text CI smoke rely on."""
+import numpy as np
+import pytest
+
+from repro.apps import ALL_APPS
+from repro.core import ir
+from repro.core.compiler import compile_program
+from repro.core.golden import Golden
+from repro.core.textio import (IRSyntaxError, expr_to_text, parse_program,
+                               program_to_text)
+
+
+def _roundtrip(prog: ir.Program) -> None:
+    text = program_to_text(prog)
+    back = parse_program(text)
+    assert back == prog                       # structural equality
+    assert program_to_text(back) == text      # textual fixpoint
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_roundtrip_pre_and_post_pass(name):
+    app = ALL_APPS[name]()
+    _roundtrip(app.prog.ir)
+    _roundtrip(compile_program(app.prog).prog)
+
+
+def test_as_text_is_deterministic_across_compiles():
+    """Two independent traces+compiles of the same app print identically —
+    no id()-derived names anywhere in the pipeline (the golden-text CI
+    smoke depends on this)."""
+    a = compile_program(ALL_APPS["strlen"]().prog).prog.as_text()
+    b = compile_program(ALL_APPS["strlen"]().prog).prog.as_text()
+    assert a == b
+
+
+def test_expr_escapes_and_literals():
+    assert expr_to_text(ir.const(-5)) == "-5"
+    assert expr_to_text(ir.var("x")) == "x"
+    assert expr_to_text(ir.var("12")) == "(var: 12)"   # literal-looking name
+    e = ir.Expr("add", (ir.var("12"), ir.const(1)))
+    assert expr_to_text(e) == "(add (var: 12) 1)"
+
+
+def test_parsed_program_is_executable():
+    """Text -> program -> Golden produces the same DRAM as the original."""
+    app = ALL_APPS["murmur3"]()
+    back = parse_program(program_to_text(app.prog.ir))
+    want = Golden(app.prog.ir, app.dram_init).run(**app.params)
+    got = Golden(back, app.dram_init).run(**app.params)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+def test_every_statement_kind_roundtrips():
+    p = ir.Program("all_stmts")
+    p.dram_decl("a", 8, "i8")
+    p.dram_decl("b", 8)
+    p.pool_decl("pl", 4, 16)
+    body = [
+        ir.Assign("x", ir.const(300), width=16),
+        ir.SRAMDecl("buf", 4, "pl"),
+        ir.SRAMLoad("y", "buf", ir.var("x")),
+        ir.SRAMStore("buf", ir.const(0), ir.var("y"),
+                     pred=ir.Expr("ne", (ir.var("x"), ir.const(0)))),
+        ir.DRAMLoad("z", "a", ir.const(1)),
+        ir.DRAMStore("b", ir.const(1), ir.var("z"), pred=ir.var("x")),
+        ir.AtomicAdd("old", "b", ir.const(0), ir.const(-1)),
+        ir.If(ir.var("x"), [ir.Exit()], [ir.Yield(ir.var("x"))]),
+        ir.While([ir.Assign("c", ir.const(0))], ir.var("c"), []),
+        ir.Foreach("i", ir.const(0), ir.var("n"), ir.const(2),
+                   [ir.Yield(ir.var("i"))], reduce_op="max", reduce_init=7,
+                   reduce_var="red", eliminate_hierarchy=False),
+        ir.Foreach("j", ir.const(0), ir.const(4), ir.const(1), [],
+                   eliminate_hierarchy=True),
+        ir.Replicate(3, [], hoisted_ptr="buf", bufferized=("x", "y")),
+        ir.ViewDecl("v", "a", ir.const(0), 4, "modify"),
+        ir.ViewLoad("vl", "v", ir.const(1)),
+        ir.ViewStore("v", ir.const(1), ir.var("vl")),
+        ir.ReadItDecl("rit", "a", ir.const(0), 8, peek=True),
+        ir.ItDeref("d", "rit", ir.const(2)),
+        ir.ItAdvance("rit", ir.const(3)),
+        ir.WriteItDecl("wit", "b", ir.const(0), 8, manual=True),
+        ir.ItWrite("wit", ir.var("d"), last=ir.var("x")),
+        ir.SRAMFree("buf", "pl"),
+        ir.Fork("f", ir.var("n"), [ir.Exit()]),
+    ]
+    p.main = ir.Function("main", ["n", "m"], body)
+    _roundtrip(p)
+
+
+def test_parse_errors_are_loud():
+    with pytest.raises(IRSyntaxError):
+        parse_program("program p { bogus_stmt }")
+    with pytest.raises(IRSyntaxError):
+        parse_program("program p { main() {")       # unterminated
+    with pytest.raises(IRSyntaxError):
+        parse_program("program p { } trailing")
+
+
+def test_node_count_tracks_stmts_and_exprs():
+    p = ir.Program("t")
+    p.main = ir.Function("main", [], [
+        ir.Assign("x", ir.Expr("add", (ir.const(1), ir.const(2)))),
+        ir.If(ir.var("x"), [ir.Assign("y", ir.var("x"))], []),
+    ])
+    nc = p.node_count()
+    assert nc == {"stmts": 3, "exprs": 5}

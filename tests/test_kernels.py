@@ -262,3 +262,51 @@ def test_moe_paths_agree():
     want = ops.moe_dense_einsum(tokens, gates, eidx, e, cap, expert_fn)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# vm_segment_reduce Pallas route: block-count guard + carry re-split
+# (ROADMAP known gap: the f32 16-bit-half trick is exact only within one
+# 256-token block; long segments must be re-split with exact int carries)
+# ---------------------------------------------------------------------------
+
+def test_pallas_segred_guard_rejects_multiblock_windows():
+    kinds = np.zeros(segment_reduce.DEFAULT_BLOCK + 1, np.int64)
+    vals = np.zeros_like(kinds)
+    with pytest.raises(ValueError, match="exceeds one"):
+        ops._pallas_segred_add(kinds, vals, 0, 0, False, interpret=True)
+
+
+def test_pallas_segred_resplit_exact_on_long_segments():
+    """A vlen>256 segment of max-half values overflows 2^24 in f32 without
+    the re-split; with it, the Pallas route stays bit-exact."""
+    from repro.core.backend import segment_reduce_window_np
+    n = 1000
+    kinds = np.concatenate([np.zeros(n, np.int64), [1, 2]]).astype(np.int64)
+    vals = np.concatenate([np.full(n, 0xFFFF, np.int64), [0, 0]])
+    ref_out = segment_reduce_window_np(kinds, vals, "add", 0, 0, False)
+    got = ops.vm_segment_reduce(kinds, vals, "add", 0, 0, False,
+                                route="pallas", interpret=True)
+    np.testing.assert_array_equal(got[0], ref_out[0])
+    np.testing.assert_array_equal(got[1], ref_out[1])
+    assert got[2:] == ref_out[2:]
+    assert int(got[1][0]) == ((n * 0xFFFF) & 0xFFFFFFFF)
+
+
+def test_pallas_segred_resplit_random_windows():
+    from repro.core.backend import segment_reduce_window_np
+    rng = np.random.default_rng(9)
+    for _ in range(8):
+        n = int(rng.integers(1, 700))
+        kinds = rng.choice([0, 0, 0, 0, 1, 2], size=n).astype(np.int64)
+        vals = rng.integers(-(1 << 31), 1 << 31, size=n).astype(np.int64)
+        acc = int(rng.integers(-100, 100))
+        go = bool(rng.random() < 0.5) or acc == 0
+        if not go:
+            acc = 0       # keep the carry state non-degenerate
+        ref_out = segment_reduce_window_np(kinds, vals, "add", 0, acc, go)
+        got = ops.vm_segment_reduce(kinds, vals, "add", 0, acc, go,
+                                    route="pallas", interpret=True)
+        np.testing.assert_array_equal(got[0], ref_out[0])
+        np.testing.assert_array_equal(got[1], ref_out[1])
+        assert got[2:] == ref_out[2:]

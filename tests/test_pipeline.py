@@ -1,0 +1,341 @@
+"""The pass-manager API (DESIGN.md §6): registry, textual pipeline specs,
+instrumentation hooks, CompileOptions-as-sugar, spec-keyed compile caching,
+and the plugin-pass path (constant-fold shrinking mapped resources)."""
+import copy
+
+import numpy as np
+import pytest
+
+import revet
+from repro.apps import ALL_APPS
+from repro.core import passes
+from repro.core.compiler import (DEFAULT_PIPELINE, CompileOptions,
+                                 compile_program, run_passes)
+from repro.core.machine import map_graph
+from repro.core.pipeline import (PASS_REGISTRY, PassManager, PipelineError,
+                                 available_passes, parse_pipeline,
+                                 register_pass, resolve_requirements)
+from repro.core.vector_vm import VectorVM
+
+BUILTINS = ["lower-memory-sugar", "insert-frees", "eliminate-hierarchy",
+            "if-to-select", "fuse-allocations", "hoist-allocators",
+            "infer-widths"]
+
+
+# ---------------------------------------------------------------------------
+# Registry + spec parsing
+# ---------------------------------------------------------------------------
+
+def test_registry_has_every_builtin_pass():
+    assert set(BUILTINS) <= set(available_passes())
+    assert "constant-fold" in available_passes()      # the in-tree plugin
+
+
+def test_parse_pipeline_normalizes_and_rejects_unknown():
+    ps = parse_pipeline("  lower-memory-sugar , insert-frees,,")
+    assert [p.name for p in ps] == ["lower-memory-sugar", "insert-frees"]
+    with pytest.raises(PipelineError, match="unknown pass"):
+        parse_pipeline("lower-memory-sugar,no-such-pass")
+
+
+def test_duplicate_registration_rejected_unless_replace():
+    with pytest.raises(PipelineError, match="already registered"):
+        register_pass("if-to-select")(lambda prog: prog)
+
+    @register_pass("if-to-select", requires=("no-sugar",), replace=True)
+    def replacement(prog):
+        return passes.if_to_select(prog)
+    try:
+        assert PASS_REGISTRY["if-to-select"].fn is replacement
+    finally:
+        register_pass("if-to-select", requires=("no-sugar",), replace=True)(
+            passes.if_to_select)
+
+
+def test_resolve_requirements_prepends_providers():
+    assert resolve_requirements(["hoist-allocators"]) == [
+        "lower-memory-sugar", "insert-frees", "hoist-allocators"]
+    assert resolve_requirements(["lower-memory-sugar"]) == \
+        ["lower-memory-sugar"]
+
+
+def test_missing_requirement_raises_with_hint():
+    app = ALL_APPS["strlen"]()       # uses iterators -> sugar present
+    pm = PassManager("hoist-allocators")
+    with pytest.raises(PipelineError, match="insert-frees,hoist-allocators"):
+        pm.run(app.prog.ir)
+
+
+def test_input_derived_invariants_allow_bare_pipelines():
+    """A sugar-free program satisfies ``no-sugar`` at input, so a bare
+    optimization pipeline runs without the lowering passes."""
+    doubler = _make_doubler()
+    traced = doubler.trace(revet.spec(4), n=4)
+    out, report = PassManager("if-to-select,infer-widths").run(traced.prog.ir)
+    assert [r.name for r in report.records] == ["if-to-select",
+                                                "infer-widths"]
+
+
+# ---------------------------------------------------------------------------
+# CompileOptions is sugar over the spec
+# ---------------------------------------------------------------------------
+
+def test_options_synthesize_default_spec():
+    assert CompileOptions().pipeline_spec() == DEFAULT_PIPELINE
+    assert CompileOptions(if_to_select=False).pipeline_spec() == \
+        DEFAULT_PIPELINE.replace("if-to-select,", "")
+    assert CompileOptions(subword_packing=False).pipeline_spec() == \
+        DEFAULT_PIPELINE.replace(",infer-widths", "")
+    # explicit pipeline overrides the booleans wholesale
+    assert CompileOptions(if_to_select=False,
+                          pipeline="lower-memory-sugar").pipeline_spec() == \
+        "lower-memory-sugar"
+
+
+def test_run_passes_back_compat_tuple():
+    app = ALL_APPS["murmur3"]()
+    prog, widths = run_passes(app.prog.ir)
+    assert isinstance(widths, dict) and widths
+    prog2, widths2 = run_passes(app.prog.ir,
+                                CompileOptions(subword_packing=False))
+    assert widths2 == {}
+
+
+def _seed_run_passes(prog, opts):
+    """The pre-pass-manager hardcoded sequence, verbatim (the seed's
+    ``run_passes``) — the bit-identical acceptance baseline."""
+    prog = copy.deepcopy(prog)
+    passes.lower_memory_sugar(prog)
+    passes.insert_frees(prog)
+    if opts.eliminate_hierarchy:
+        passes.eliminate_hierarchy(prog)
+    if opts.if_to_select:
+        passes.if_to_select(prog)
+    if opts.fuse_allocations:
+        passes.fuse_allocations(prog)
+    if opts.hoist_allocators:
+        passes.hoist_allocators(prog)
+    widths = passes.infer_widths(prog) if opts.subword_packing else {}
+    return prog, widths
+
+
+def _dfg_fingerprint(dfg):
+    """Everything the executors consume, modulo the id()-derived
+    replicate_group tag (nondeterministic by construction)."""
+    ctxs = tuple(
+        (c.id, c.name, type(c.head).__name__, tuple(_head_cfg(c.head)),
+         tuple((op.op, op.dst, op.srcs, op.imm, op.space, op.width, op.pred)
+               for op in c.body),
+         tuple((o.link, o.kind, o.values, o.pred, o.reduce_op,
+                o.reduce_init, o.lower_barrier) for o in c.outs),
+         c.nest_depth, c.replicate_copy)
+        for c in dfg.contexts.values())
+    links = tuple((l.id, l.vars, l.depth, l.kind, l.src, l.dst)
+                  for l in dfg.links.values())
+    return ctxs, links, dfg.entry, dfg.result_link
+
+
+def _head_cfg(h):
+    import dataclasses
+    return dataclasses.astuple(h) if dataclasses.fields(h) else ()
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_default_compile_bit_identical_to_seed_sequence(name):
+    """compile_program with default CompileOptions == the seed's hardcoded
+    pass chain: same post-pass IR, same widths, same DFG."""
+    from repro.core import lowering
+    app = ALL_APPS[name]()
+    want_prog, want_widths = _seed_run_passes(app.prog.ir, CompileOptions())
+    res = compile_program(app.prog)
+    assert res.prog == want_prog
+    assert res.prog.as_text() == want_prog.as_text()
+    assert res.widths == want_widths
+    assert _dfg_fingerprint(res.dfg) == \
+        _dfg_fingerprint(lowering.lower(want_prog))
+
+
+# ---------------------------------------------------------------------------
+# Instrumentation hooks
+# ---------------------------------------------------------------------------
+
+def test_pipeline_report_records_every_pass():
+    app = ALL_APPS["strlen"]()
+    res = compile_program(app.prog)
+    rep = res.report
+    assert rep is not None and rep.spec == DEFAULT_PIPELINE
+    assert [r.name for r in rep.records] == BUILTINS
+    assert all(r.wall_s >= 0 for r in rep.records)
+    assert rep.records[0].stmts_after > rep.records[0].stmts_before  # sugar
+    assert rep.total_wall_s >= sum(r.wall_s for r in rep.records)
+    d = rep.as_dict()
+    assert [p["name"] for p in d["passes"]] == BUILTINS
+    assert "lower-memory-sugar" in str(rep)
+
+
+def test_print_ir_after_collects_roundtrip_stable_text():
+    from repro.core.textio import parse_program
+    app = ALL_APPS["murmur3"]()
+    seen = []
+    pm = PassManager(DEFAULT_PIPELINE,
+                     print_ir_after=lambda n, t: seen.append((n, t)))
+    out, report = pm.run(app.prog.ir)
+    assert [n for n, _ in seen] == BUILTINS
+    assert report.ir_texts == seen
+    final = seen[-1][1]
+    assert final == out.as_text()
+    assert parse_program(final).as_text() == final          # round-trip
+    # texts are pure functions of the input: a second run is identical
+    _, report2 = pm.run(app.prog.ir)
+    assert report2.ir_texts == report.ir_texts
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_verify_each_passes_on_every_app_at_every_stage(name):
+    app = ALL_APPS[name]()
+    res = compile_program(app.prog, CompileOptions(verify_each=True))
+    assert res.report.verified
+    vm = VectorVM(res.dfg, app.dram_init)
+    out = vm.run(**app.params)
+    for arr, want in app.expected.items():
+        np.testing.assert_array_equal(np.asarray(out[arr])[:len(want)], want)
+
+
+# ---------------------------------------------------------------------------
+# Front-end surface: pipeline=, Lowered.as_text, spec-keyed cache
+# ---------------------------------------------------------------------------
+
+def _make_doubler(**kw):
+    @revet.program(outputs={"dst": "src"}, **kw)
+    def doubler(b, src, dst, *, n):
+        with b.foreach(n) as (t, i):
+            v = t.let(t.dram_load(src, i))
+            t.dram_store(dst, i, v * 2)
+    return doubler
+
+
+def test_lowered_as_text_and_pipeline_report():
+    fn = _make_doubler()
+    lo = fn.lower(revet.spec(8), n=8)
+    text = lo.as_text()
+    assert text.startswith("program doubler {")
+    assert lo.pipeline_report is not None
+    assert lo.pipeline_report.spec == DEFAULT_PIPELINE
+    from repro.core.textio import parse_program
+    assert parse_program(text).as_text() == text
+
+
+def test_cache_keys_on_pipeline_spec():
+    fn = _make_doubler()
+    src = np.arange(8)
+    base = fn.run(src, n=8)
+    assert base.report.cache_hit is False
+    # equivalent spec spelled three ways -> one entry
+    hit1 = fn.run(src, n=8, pipeline=DEFAULT_PIPELINE)
+    hit2 = fn.run(src, n=8, options=CompileOptions(pipeline=DEFAULT_PIPELINE))
+    assert hit1.compiled is base.compiled and hit1.report.cache_hit is True
+    assert hit2.compiled is base.compiled and hit2.report.cache_hit is True
+    # custom pipeline -> miss; repeated custom pipeline -> hit
+    custom = DEFAULT_PIPELINE + ",constant-fold"
+    miss = fn.run(src, n=8, pipeline=custom)
+    assert miss.report.cache_hit is False
+    assert miss.compiled is not base.compiled
+    assert fn.run(src, n=8, pipeline=custom).compiled is miss.compiled
+    # boolean sugar that drops a pass -> different spec -> miss
+    assert fn.run(src, n=8, options=CompileOptions(if_to_select=False)
+                  ).report.cache_hit is False
+    assert fn.cache_info().currsize == 3
+
+
+def test_decorator_level_pipeline_default():
+    spec = "lower-memory-sugar,insert-frees,infer-widths"
+    fn = _make_doubler(pipeline=spec)
+    ex = fn.run(np.arange(4), n=4)
+    assert ex.compiled.result.report.spec == spec
+    np.testing.assert_array_equal(ex.outputs[0], np.arange(4) * 2)
+
+
+def test_pipeline_is_reserved_kwarg():
+    with pytest.raises(TypeError, match="reserved"):
+        revet.program(outputs={"out": 4})(lambda b, pipeline, out: None)
+
+
+# ---------------------------------------------------------------------------
+# User plugin passes: revet.register_pass
+# ---------------------------------------------------------------------------
+
+def test_user_pass_slots_into_the_registry():
+    calls = []
+
+    @revet.register_pass("test-count-stmts", requires=("no-sugar",),
+                         replace=True)
+    def count_stmts(prog, ctx):
+        from repro.core import ir
+        ctx.stat("stmts", sum(1 for _ in ir.walk(prog.main.body)))
+        calls.append(ctx.established.copy())
+        return prog
+
+    fn = _make_doubler()
+    ex = fn.run(np.arange(4), n=4,
+                pipeline=DEFAULT_PIPELINE + ",test-count-stmts")
+    assert calls and "no-sugar" in calls[0]
+    rec = ex.compiled.result.report.records[-1]
+    assert rec.name == "test-count-stmts" and rec.stats["stmts"] > 0
+    np.testing.assert_array_equal(ex.outputs[0], np.arange(4) * 2)
+
+
+def test_constant_fold_plugin_shrinks_mapped_resources():
+    """Acceptance: the plugin optimization pass reduces machine-mapped
+    resources on >= 1 Table III app with outputs unchanged."""
+    spec = DEFAULT_PIPELINE.replace(",infer-widths",
+                                    ",constant-fold,infer-widths")
+    shrunk_cu, shrunk_ops = [], []
+    for name in sorted(ALL_APPS):
+        app = ALL_APPS[name]()
+        base = compile_program(app.prog)
+        fold = compile_program(app.prog, CompileOptions(
+            pipeline=spec, verify_each=True))
+        rb = map_graph(base.dfg, base.widths)
+        rf = map_graph(fold.dfg, fold.widths)
+        assert rf.cu <= rb.cu and rf.mu <= rb.mu, name
+        assert fold.dfg.stats()["body_ops"] <= base.dfg.stats()["body_ops"]
+        if rf.cu < rb.cu:
+            shrunk_cu.append(name)
+        if fold.dfg.stats()["body_ops"] < base.dfg.stats()["body_ops"]:
+            shrunk_ops.append(name)
+        vm = VectorVM(fold.dfg, app.dram_init)
+        out = vm.run(**app.params)
+        for arr, want in app.expected.items():
+            np.testing.assert_array_equal(
+                np.asarray(out[arr])[:len(want)], want,
+                err_msg=f"{name}: constant-fold changed output '{arr}'")
+    assert shrunk_cu, "constant-fold reduced CU count on no app"
+    assert len(shrunk_ops) >= 5
+
+
+def test_verify_each_applies_to_cache_hits():
+    """verify_each is not in the cache key, but a hit requested with it must
+    still be verified (once, after the fact)."""
+    fn = _make_doubler()
+    base = fn.run(np.arange(8), n=8)                 # compiled unverified
+    assert base.compiled.result.report.verified is False
+    hit = fn.run(np.arange(8), n=8,
+                 options=CompileOptions(verify_each=True))
+    assert hit.report.cache_hit is True
+    assert hit.compiled is base.compiled
+    assert hit.compiled.result.report.verified is True
+
+
+def test_verify_each_on_cache_hit_catches_corruption():
+    from repro.core.verifier import VerificationError
+    fn = _make_doubler()
+    compiled = fn.run(np.arange(8), n=8).compiled
+    ctx = next(c for c in compiled.result.dfg.contexts.values() if c.body)
+    old_srcs = ctx.body[0].srcs
+    ctx.body[0].srcs = ("%ghost",)
+    try:
+        with pytest.raises(VerificationError, match="unavailable register"):
+            fn.run(np.arange(8), n=8,
+                   options=CompileOptions(verify_each=True))
+    finally:
+        ctx.body[0].srcs = old_srcs

@@ -1,0 +1,238 @@
+"""Structural verifier (core/verifier.py): the invariants lowering silently
+assumes must be checkable — and breaches must be caught, not miscompiled."""
+import numpy as np
+import pytest
+
+from repro.core import ir, lowering
+from repro.core.compiler import CompileOptions, compile_program
+from repro.core.dfg import Output
+from repro.core.ir import (Assign, DRAMLoad, DRAMStore, Exit, Expr, Foreach,
+                           Fork, If, SRAMDecl, SRAMFree, While, Yield, const,
+                           var)
+from repro.core.lang import Prog
+from repro.core.verifier import (VerificationError, verify_dfg,
+                                 verify_program)
+
+
+def _prog(body, dram=("a", "out"), params=("n",)):
+    p = ir.Program("t")
+    for d in dram:
+        p.dram_decl(d, 16)
+    p.pool_decl("default")
+    p.main = ir.Function("main", list(params), body)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Defined-before-use
+# ---------------------------------------------------------------------------
+
+def test_use_before_def_rejected():
+    p = _prog([DRAMStore("out", const(0), var("x"))])
+    with pytest.raises(VerificationError, match="undefined variable.*x"):
+        verify_program(p)
+
+
+def test_def_in_one_branch_only_is_rejected():
+    """lowering would put the var on the join link payload with one branch
+    never writing the register — exactly the silent assumption."""
+    p = _prog([
+        If(var("n"), [Assign("x", const(1))], []),
+        DRAMStore("out", const(0), var("x")),
+    ])
+    with pytest.raises(VerificationError, match="undefined variable.*x"):
+        verify_program(p)
+
+
+def test_def_in_both_branches_ok():
+    p = _prog([
+        If(var("n"), [Assign("x", const(1))], [Assign("x", const(2))]),
+        DRAMStore("out", const(0), var("x")),
+    ])
+    verify_program(p)
+
+
+def test_exiting_branch_does_not_count():
+    p = _prog([
+        If(var("n"), [Exit()], [Assign("x", const(2))]),
+        DRAMStore("out", const(0), var("x")),
+    ])
+    verify_program(p)
+
+
+def test_while_header_defs_reach_cond_and_body():
+    p = _prog([While([DRAMLoad("v", "a", const(0))],
+                     Expr("ne", (var("v"), const(0))),
+                     [DRAMStore("out", const(0), var("v"))])])
+    verify_program(p)
+    p2 = _prog([While([], Expr("ne", (var("v"), const(0))), [])])
+    with pytest.raises(VerificationError, match="condition reads undefined"):
+        verify_program(p2)
+
+
+def test_foreach_ivar_visible_to_children_not_after():
+    body = [Foreach("i", const(0), var("n"), const(1),
+                    [DRAMStore("out", var("i"), var("i"))])]
+    verify_program(_prog(body))
+    after = body + [DRAMStore("out", const(0), var("i"))]
+    with pytest.raises(VerificationError, match="undefined variable.*i"):
+        verify_program(_prog(after))
+
+
+# ---------------------------------------------------------------------------
+# Declarations, frees, pools
+# ---------------------------------------------------------------------------
+
+def test_undeclared_dram_rejected():
+    p = _prog([DRAMStore("nope", const(0), const(1))])
+    with pytest.raises(VerificationError, match="undeclared DRAM"):
+        verify_program(p)
+
+
+def test_undeclared_pool_rejected():
+    p = _prog([SRAMDecl("b", 4, "ghost")])
+    with pytest.raises(VerificationError, match="undeclared pool"):
+        verify_program(p)
+
+
+def test_free_pool_mismatch_rejected():
+    p = ir.Program("t")
+    p.pool_decl("default")
+    p.pool_decl("other")
+    p.main = ir.Function("main", [], [
+        SRAMDecl("b", 4, "default"), SRAMFree("b", "other")])
+    with pytest.raises(VerificationError, match="does not match"):
+        verify_program(p)
+
+
+def test_duplicate_buffer_names_rejected():
+    p = ir.Program("t")
+    p.pool_decl("default")
+    p.main = ir.Function("main", [], [
+        SRAMDecl("b", 4, "default"), SRAMFree("b", "default"),
+        SRAMDecl("b", 4, "default"), SRAMFree("b", "default")])
+    with pytest.raises(VerificationError, match="declared twice"):
+        verify_program(p)
+
+
+def test_unfreed_buffer_rejected_once_frees_inserted():
+    p = ir.Program("t")
+    p.pool_decl("default")
+    p.main = ir.Function("main", [], [SRAMDecl("b", 4, "default")])
+    verify_program(p)                                    # pre insert-frees: ok
+    with pytest.raises(VerificationError, match="never freed"):
+        verify_program(p, {"frees-inserted"})
+
+
+def test_surviving_sugar_rejected_after_lowering():
+    p = _prog([ir.ViewDecl("v", "a", const(0), 4, "read")])
+    verify_program(p)
+    with pytest.raises(VerificationError, match="survived sugar lowering"):
+        verify_program(p, {"no-sugar"})
+
+
+# ---------------------------------------------------------------------------
+# Thread-structure discipline
+# ---------------------------------------------------------------------------
+
+def test_yield_outside_reducing_foreach_rejected():
+    p = _prog([Foreach("i", const(0), var("n"), const(1), [Yield(var("i"))])])
+    with pytest.raises(VerificationError, match="yield outside a reducing"):
+        verify_program(p)
+
+
+def test_yield_across_while_rejected():
+    p = _prog([Foreach("i", const(0), var("n"), const(1),
+                       [While([Assign("c", const(0))], var("c"),
+                              [Yield(var("i"))])],
+                       reduce_op="add", reduce_var="r")])
+    with pytest.raises(VerificationError, match="yield outside a reducing"):
+        verify_program(p)
+
+
+def test_yield_under_if_inside_reducing_foreach_ok():
+    p = _prog([Foreach("i", const(0), var("n"), const(1),
+                       [If(var("i"), [Yield(var("i"))], [])],
+                       reduce_op="add", reduce_var="r"),
+               DRAMStore("out", const(0), var("r"))])
+    verify_program(p)
+
+
+def test_fork_must_be_tail():
+    p = _prog([Fork("f", var("n"), []),
+               DRAMStore("out", const(0), const(1))])
+    with pytest.raises(VerificationError, match="last statement"):
+        verify_program(p)
+
+
+def test_fork_in_if_branch_rejected():
+    p = _prog([If(var("n"), [Fork("f", var("n"), [])], [])])
+    with pytest.raises(VerificationError, match="not a thread tail"):
+        verify_program(p)
+
+
+def test_fork_at_while_body_tail_ok():
+    p = _prog([While([Assign("c", const(0))], var("c"),
+                     [Fork("f", var("n"), [Exit()])])])
+    verify_program(p)
+
+
+def test_pragma_foreach_with_reduction_rejected():
+    p = _prog([Foreach("i", const(0), var("n"), const(1), [Yield(var("i"))],
+                       reduce_op="add", reduce_var="r",
+                       eliminate_hierarchy=True)])
+    with pytest.raises(VerificationError, match="use atomics"):
+        verify_program(p)
+
+
+# ---------------------------------------------------------------------------
+# DFG-level checks
+# ---------------------------------------------------------------------------
+
+def _lowered_strlen():
+    from repro.apps import ALL_APPS
+    app = ALL_APPS["strlen"]()
+    return compile_program(app.prog).dfg
+
+
+def test_verify_dfg_accepts_every_lowered_app():
+    from repro.apps import ALL_APPS
+    for name in sorted(ALL_APPS):
+        res = compile_program(ALL_APPS[name]().prog)
+        verify_dfg(res.dfg)
+
+
+def test_verify_dfg_rejects_double_producer():
+    g = _lowered_strlen()
+    ctx = g.contexts[g.entry]
+    lid = ctx.outs[0].link
+    other = next(c for c in g.contexts.values()
+                 if c.id != ctx.id and c.outs)
+    other.outs.append(Output(lid, "pass", g.links[lid].vars))
+    with pytest.raises(VerificationError, match="producers"):
+        verify_dfg(g)
+
+
+def test_verify_dfg_rejects_unavailable_register():
+    g = _lowered_strlen()
+    ctx = next(c for c in g.contexts.values() if c.body)
+    ctx.body[0].srcs = ("%ghost_reg",)
+    with pytest.raises(VerificationError, match="unavailable register"):
+        verify_dfg(g)
+
+
+def test_verify_dfg_rejects_bad_backedge_depth():
+    from repro.core.dfg import FwdBwdMergeHead
+    g = _lowered_strlen()
+    loop = next(c for c in g.contexts.values()
+                if isinstance(c.head, FwdBwdMergeHead))
+    g.links[loop.head.back].depth += 1
+    with pytest.raises(VerificationError, match="backedge depth"):
+        verify_dfg(g)
+
+
+def test_compile_program_verifies_dfg_when_asked():
+    from repro.apps import ALL_APPS
+    app = ALL_APPS["kdtree"]()
+    res = compile_program(app.prog, CompileOptions(verify_each=True))
+    assert res.report.verified
