@@ -8,6 +8,8 @@ the executor-backend suite.
         BENCH_api.json (front-end dispatch overhead vs direct VectorVM)
     PYTHONPATH=src python -m benchmarks.run --only compile    # writes
         BENCH_compile.json (per-pass wall time + IR node deltas per app)
+    PYTHONPATH=src python -m benchmarks.run --only serve      # writes
+        BENCH_serve.json (batched vs sequential serving throughput)
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark cell.
 """
@@ -22,12 +24,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table4,table5,fig12,fig13,"
-                         "fig14,roofline,vectorvm,micro,api,compile")
+                         "fig14,roofline,vectorvm,micro,api,compile,serve")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (api_bench, backends, compile_bench, figures, roofline,
-                   tables)
+                   serve_bench, tables)
     benches = {
         "table3": tables.table3_apps,
         "table4": tables.table4_resources,
@@ -40,6 +42,7 @@ def main() -> None:
         "micro": backends.reduce_micro,
         "api": api_bench.api_dispatch,
         "compile": compile_bench.compile_pipeline,
+        "serve": serve_bench.serve_batching,
     }
     if only:
         unknown = only - set(benches)

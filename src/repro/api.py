@@ -70,10 +70,11 @@ from .core.vector_vm import VectorVM
 from .core.verifier import VerificationError, verify_program
 
 __all__ = [
-    "ArraySpec", "CacheInfo", "CompiledProgram", "Execution", "Lowered",
-    "PassManager", "PipelineReport", "ProgramFn", "RunReport", "Traced",
-    "VerificationError", "available_passes", "cache_info", "clear_cache",
-    "compile", "lower", "program", "register_pass", "spec", "trace",
+    "ArraySpec", "BatchExecution", "CacheInfo", "CompiledProgram",
+    "Execution", "Lowered", "PassManager", "PipelineReport", "ProgramFn",
+    "RunReport", "Traced", "VerificationError", "available_passes",
+    "cache_info", "clear_cache", "compile", "fuse_dram_images", "lower",
+    "program", "register_pass", "run_fused", "spec", "trace",
     "verify_program",
 ]
 
@@ -213,6 +214,36 @@ class RunReport:
     cycles: int                         # cost-model estimate (vector only)
     lane_occupancy: float               # useful/issued lanes (vector only)
     cache_hit: Optional[bool] = None    # compile-cache outcome of this call
+    rid: Optional[int] = None           # request id within a batched launch
+
+    @classmethod
+    def from_vm(cls, vm, executor: str, wall_s: float,
+                cache_hit: bool | None = None) -> "RunReport":
+        """The one report-building path for whole-launch runs — shared by
+        ``CompiledProgram.execute``, ``execute_batch``'s aggregate report,
+        and the serving engine's raw-``Prog`` shim, so they cannot drift."""
+        is_vec = executor == "vector"
+        return cls(
+            executor=executor,
+            backend=vm.backend.name if is_vec else None,
+            wall_s=wall_s, stats=vm.stats,
+            cycles=int(vm.estimated_cycles()) if is_vec else 0,
+            lane_occupancy=vm.lane_occupancy() if is_vec else 1.0,
+            cache_hit=cache_hit)
+
+    @classmethod
+    def for_request(cls, vm, rid: int, wall_s: float) -> "RunReport":
+        """Per-request view of one batched VectorVM launch: lane-attributable
+        stats and cost-model cycles are de-interleaved per request
+        (``vm.request_stats``/``request_cycles``); ``wall_s`` is the launch
+        wall amortized over the batch (lane occupancy stays launch-wide)."""
+        return cls(
+            executor="vector", backend=vm.backend.name,
+            wall_s=wall_s / vm.n_requests,
+            stats=vm.request_stats(rid),
+            cycles=vm.request_cycles(rid),
+            lane_occupancy=vm.lane_occupancy(),
+            cache_hit=None, rid=rid)
 
 
 @dataclass
@@ -231,6 +262,83 @@ class Execution:
 
     def unpacked(self):
         return self.outputs[0] if len(self.outputs) == 1 else self.outputs
+
+
+@dataclass
+class BatchExecution:
+    """One fused batched launch: per-request :class:`Execution` views (each
+    with its own de-interleaved DRAM slice and attributed :class:`RunReport`)
+    plus the shared VM and the aggregate launch report. Iterates / indexes
+    as the per-request executions, in request order."""
+    executions: tuple[Execution, ...]
+    vm: Any
+    report: RunReport                   # aggregate: whole-launch wall + stats
+
+    def __iter__(self):
+        return iter(self.executions)
+
+    def __len__(self) -> int:
+        return len(self.executions)
+
+    def __getitem__(self, i: int) -> Execution:
+        return self.executions[i]
+
+
+def fuse_dram_images(dfg, inits: Sequence[dict]) -> dict[str, np.ndarray]:
+    """Concatenate per-request DRAM init images into one fused image:
+    request ``r``'s values land at base offset ``r * size`` of each array
+    (the layout :meth:`~repro.core.vector_vm.VectorVM.request_dram` splits
+    back apart). Requests may omit arrays — their slice stays zero, exactly
+    like a single-request run without that init."""
+    fused: dict[str, np.ndarray] = {}
+    nreq = len(inits)
+    for r, init in enumerate(inits):
+        unknown = set(init) - set(dfg.dram)
+        if unknown:
+            # the sequential path fails loudly on unknown names (KeyError at
+            # VM init); a fused launch must not silently run on zero slices
+            raise KeyError(
+                f"request {r}: unknown DRAM array(s) {sorted(unknown)} "
+                f"(declared: {sorted(dfg.dram)})")
+    for name, d in dfg.dram.items():
+        if not any(name in init for init in inits):
+            continue
+        buf = np.zeros(d.size * nreq, np.int64)
+        for r, init in enumerate(inits):
+            if name not in init:
+                continue
+            # raw values: the VM wraps the whole fused image per-dtype once
+            # at init (one pass instead of one per request)
+            a = np.asarray(init[name], np.int64).ravel()
+            if a.size > d.size:
+                raise ValueError(
+                    f"request {r}: init for '{name}' has {a.size} elements, "
+                    f"DRAM array holds {d.size}")
+            buf[r * d.size: r * d.size + a.size] = a
+        fused[name] = buf
+    return fused
+
+
+def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
+              **vm_kwargs) -> tuple[Any, float]:
+    """Low-level fused launch shared by :meth:`CompiledProgram.execute_batch`
+    and the serving engine's raw-``Prog`` shim: build the fused image, scale
+    SRAM pools by the batch size (allocation back-pressure stays per-launch,
+    so a batch must not starve where B sequential runs would not), run one
+    batched VectorVM. Returns ``(vm, launch_wall_seconds)``."""
+    inits = [arrays for arrays, _scalars in requests]
+    params = [{k: int(v) for k, v in scalars.items()}
+              for _arrays, scalars in requests]
+    nreq = len(requests)
+    pool_override = dict(vm_kwargs.pop("pool_override", None) or {})
+    for pname, pool in result.dfg.pools.items():
+        pool_override.setdefault(pname, pool.n_bufs * nreq)
+    vm = VectorVM(result.dfg, fuse_dram_images(result.dfg, inits),
+                  backend=backend, n_requests=nreq,
+                  pool_override=pool_override, **vm_kwargs)
+    t0 = time.perf_counter()
+    vm.run_batch(params)
+    return vm, time.perf_counter() - t0
 
 
 CacheInfo = collections.namedtuple("CacheInfo", "hits misses currsize")
@@ -306,11 +414,11 @@ class CompiledProgram:
     source_ir: Any = None    # pre-pass language IR (the Golden oracle input)
 
     # -- execution ----------------------------------------------------------
-    def execute(self, arrays: dict[str, np.ndarray], scalars: dict[str, int],
-                executor: str = "vector", cache_hit: bool | None = None,
-                require_inputs: bool = True,
-                backend: str | ExecutorBackend | None = None,
-                **vm_kwargs) -> Execution:
+    def _check_request(self, arrays: dict[str, np.ndarray],
+                       scalars: dict[str, int],
+                       require_inputs: bool = True) -> None:
+        """Validate one request's arrays + scalars against the compiled
+        specs (shared by ``execute`` and every row of ``execute_batch``)."""
         for n, sp in self.in_specs.items():
             if n not in arrays:
                 if require_inputs:
@@ -335,6 +443,13 @@ class CompiledProgram:
         if missing:
             raise TypeError(f"{self.name}: missing scalar param(s) "
                             f"{sorted(missing)}")
+
+    def execute(self, arrays: dict[str, np.ndarray], scalars: dict[str, int],
+                executor: str = "vector", cache_hit: bool | None = None,
+                require_inputs: bool = True,
+                backend: str | ExecutorBackend | None = None,
+                **vm_kwargs) -> Execution:
+        self._check_request(arrays, scalars, require_inputs)
         if executor != "vector" and vm_kwargs:
             raise TypeError(f"{self.name}: VM options {sorted(vm_kwargs)} "
                             f"only apply to the vector executor, not "
@@ -357,17 +472,48 @@ class CompiledProgram:
         t0 = time.perf_counter()
         dram = vm.run(**{k: int(v) for k, v in scalars.items()})
         wall = time.perf_counter() - t0
-        report = RunReport(
-            executor=executor,
-            backend=vm.backend.name if executor == "vector" else None,
-            wall_s=wall, stats=vm.stats,
-            cycles=int(vm.estimated_cycles()) if executor == "vector" else 0,
-            lane_occupancy=(vm.lane_occupancy()
-                            if executor == "vector" else 1.0),
-            cache_hit=cache_hit)
+        report = RunReport.from_vm(vm, executor, wall, cache_hit=cache_hit)
         outputs = tuple(np.asarray(dram[n]).copy()
                         for n, _sz, _dt in self.out_info)
         return Execution(outputs, dram, report, vm, self)
+
+    def execute_batch(self, requests: Sequence[tuple[dict, dict]],
+                      require_inputs: bool = True,
+                      backend: str | ExecutorBackend | None = None,
+                      **vm_kwargs) -> "BatchExecution":
+        """Serve many requests in **one** fused VectorVM launch.
+
+        ``requests`` is a sequence of ``(arrays, scalars)`` pairs, one per
+        request (all validated against the same compiled shape; scalar
+        params may diverge per request). Per-request DRAM images are
+        concatenated at per-request base offsets into one fused image, one
+        thread group is spawned per request (the request id rides the thread
+        context), and the superstep scheduler interleaves lanes from all
+        requests — then per-request DRAM slices, outputs, and
+        lane-attributable stats are de-interleaved back out. Outputs are
+        bit-identical to running each request through :meth:`execute`
+        (DESIGN.md §7)."""
+        reqs = [(dict(a or {}), dict(s or {})) for a, s in requests]
+        if not reqs:
+            raise ValueError(f"{self.name}: execute_batch needs at least "
+                             "one request")
+        for arrays, scalars in reqs:
+            self._check_request(arrays, scalars, require_inputs)
+        vm, wall = run_fused(
+            self.result, self.backend if backend is None else backend,
+            reqs, **vm_kwargs)
+        executions = []
+        for rid in range(len(reqs)):
+            dram = vm.request_dram(rid)
+            # outputs are copies (not views of dram) so in-place mutation
+            # behaves exactly like the solo execute path
+            outputs = tuple(np.asarray(dram[n]).copy()
+                            for n, _sz, _dt in self.out_info)
+            executions.append(Execution(
+                outputs, dram, RunReport.for_request(vm, rid, wall),
+                vm, self))
+        return BatchExecution(tuple(executions), vm,
+                              RunReport.from_vm(vm, "vector", wall))
 
     def _bind_arrays(self, args, kwargs):
         arrays, scalars, _ = _bind_call(

@@ -186,6 +186,40 @@ def segment_reduce_reference(kinds: np.ndarray, vals: np.ndarray | None,
             acc, group_open)
 
 
+def segment_emit_pattern(
+        kinds: np.ndarray, group_open: bool
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Token-emission pattern of one segment-reduce window — a pure function
+    of ``(kinds, group_open)``, shared by :func:`segment_reduce_window_np`
+    and the VectorVM's per-request attribution (the VM uses it to stamp each
+    emitted token with the request id of the barrier that closed its group,
+    so it must stay bit-identical across backends).
+
+    Returns ``(emit, lower, open_, seg, is_bar)``: per input barrier (in
+    order), whether it emits a data token carrying the accumulator and
+    whether it re-emits as a lowered barrier Ω(n-1); ``open_`` is the
+    per-segment open flag (``open_[-1]`` is the window's outgoing
+    ``group_open``); ``seg``/``is_bar`` are the per-position segment ids and
+    barrier mask, returned so :func:`segment_reduce_window_np` does not
+    recompute them on the hot path.
+    """
+    kinds = np.asarray(kinds, _I64)
+    is_bar = kinds > 0
+    nbar = int(is_bar.sum())
+    # segment id per position: barrier j closes segment j
+    seg = np.cumsum(is_bar) - is_bar
+    cnt = np.zeros(nbar + 1, _I64)
+    np.add.at(cnt, seg[~is_bar], 1)
+    open_ = cnt > 0
+    open_[0] |= bool(group_open)
+    bk = kinds[is_bar]                        # barrier levels, in order
+    # a barrier emits iff Ω1, or its group is open; a *non*-emitting barrier
+    # leaves the accumulator untouched, so a segment starts from ``init``
+    # only once some earlier barrier has emitted — else the carry flows on
+    emit = (bk == 1) | open_[:nbar]
+    return emit, bk > 1, open_, seg, is_bar
+
+
 def segment_reduce_window_np(kinds: np.ndarray, vals: np.ndarray | None,
                              op: str, init: int, acc: int, group_open: bool
                              ) -> tuple[np.ndarray, np.ndarray, int, bool]:
@@ -199,23 +233,12 @@ def segment_reduce_window_np(kinds: np.ndarray, vals: np.ndarray | None,
     Returns ``(out_kinds, out_vals, new_acc, new_group_open)``.
     """
     kinds = np.asarray(kinds, _I64)
-    n = len(kinds)
-    is_bar = kinds > 0
-    nbar = int(is_bar.sum())
+    emit, lower, open_, seg, is_bar = segment_emit_pattern(kinds, group_open)
+    nbar = len(emit)
     nseg = nbar + 1
-    # segment id per position: barrier j closes segment j
-    seg = np.cumsum(is_bar) - is_bar
-    cnt = np.zeros(nseg, _I64)
     data_idx = np.nonzero(~is_bar)[0]
     segs_d = seg[data_idx]
-    np.add.at(cnt, segs_d, 1)
-    open_ = cnt > 0
-    open_[0] |= bool(group_open)
     bk = kinds[is_bar]                        # barrier levels, in order
-    # a barrier emits iff Ω1, or its group is open; a *non*-emitting barrier
-    # leaves the accumulator untouched, so a segment starts from ``init``
-    # only once some earlier barrier has emitted — else the carry flows on
-    emit = (bk == 1) | open_[:nbar]
     emitted_before = np.zeros(nseg, bool)
     emitted_before[1:] = np.cumsum(emit) > 0
     g = np.where(emitted_before, init, acc).astype(_I64)
@@ -232,8 +255,7 @@ def segment_reduce_window_np(kinds: np.ndarray, vals: np.ndarray | None,
         v2 = np.zeros((nbar, 2), _I64)
         k2[:, 0] = np.where(emit, 0, NOTHING)
         v2[:, 0] = np.where(emit, g[:nbar], 0)
-        hi = bk > 1
-        k2[hi, 1] = bk[hi] - 1
+        k2[lower, 1] = bk[lower] - 1
         flat_k = k2.ravel()
         keep = flat_k != NOTHING
         out_kinds = flat_k[keep]

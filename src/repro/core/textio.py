@@ -94,12 +94,15 @@ def _stmt_lines(s: ir.Stmt) -> list[str]:
     if isinstance(s, SRAMLoad):
         return [f"sram_load {s.var} {s.buf} {e(s.idx)}"]
     if isinstance(s, SRAMStore):
-        p = f" if {e(s.pred)}" if s.pred is not None else ""
+        # predicates print as "when", not "if": a trailing "if" is ambiguous
+        # with an if *statement* on the next line (found by the roundtrip
+        # fuzzer in tests/test_ir_text.py)
+        p = f" when {e(s.pred)}" if s.pred is not None else ""
         return [f"sram_store {s.buf} {e(s.idx)} {e(s.val)}{p}"]
     if isinstance(s, DRAMLoad):
         return [f"dram_load {s.var} {s.arr} {e(s.addr)}"]
     if isinstance(s, DRAMStore):
-        p = f" if {e(s.pred)}" if s.pred is not None else ""
+        p = f" when {e(s.pred)}" if s.pred is not None else ""
         return [f"dram_store {s.arr} {e(s.addr)} {e(s.val)}{p}"]
     if isinstance(s, AtomicAdd):
         return [f"atomic_add {s.var} {s.arr} {e(s.addr)} {e(s.delta)}"]
@@ -243,13 +246,13 @@ def _parse_stmt(kw: str, ts: _Tokens) -> ir.Stmt:
         return SRAMLoad(ts.next(), ts.next(), ex())
     if kw == "sram_store":
         buf, idx, val = ts.next(), ex(), ex()
-        pred = ex() if _opt(ts, "if") else None
+        pred = ex() if _opt(ts, "when") else None
         return SRAMStore(buf, idx, val, pred)
     if kw == "dram_load":
         return DRAMLoad(ts.next(), ts.next(), ex())
     if kw == "dram_store":
         arr, addr, val = ts.next(), ex(), ex()
-        pred = ex() if _opt(ts, "if") else None
+        pred = ex() if _opt(ts, "when") else None
         return DRAMStore(arr, addr, val, pred)
     if kw == "atomic_add":
         return AtomicAdd(ts.next(), ts.next(), ex(), ex())

@@ -35,6 +35,17 @@ A cycle-approximate cost model runs alongside: a context firing k lanes costs
 ``ceil(k/LANES)`` issue slots on its (virtual) CU; the busiest context bounds
 throughput (pipeline parallelism across contexts is free, as on the spatial
 array). This replaces the paper's cycle-accurate simulator.
+
+**Request batching** (DESIGN.md §7): one VM can serve ``n_requests`` fused
+``main()`` invocations in a single launch. Every queue carries a hidden
+request-id payload column; DRAM arrays are sized ``n_requests *`` the
+compiled per-request size and every DRAM access is rebased by
+``rid * per_request_size`` (bounds stay per-request, so an out-of-range
+address can never touch a neighboring request's slice). Lanes from all
+requests interleave freely in the same windows — that is the point: control
+overhead (ticks, window dispatch, kernel launches) amortizes across the
+batch. Lane-attributable stats are de-interleaved per request
+(:meth:`VectorVM.request_stats`).
 """
 from __future__ import annotations
 
@@ -44,9 +55,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import ir
-from .backend import ExecutorBackend, _w32, make_backend, wrap_dram_init
+from .backend import (ExecutorBackend, _w32, make_backend,
+                      segment_emit_pattern, wrap_dram_init)
 from .dfg import (DFG, BodyOp, Context, CounterHead, ForwardMergeHead,
-                  FwdBwdMergeHead, SingleHead, SourceHead, ZipHead)
+                  FwdBwdMergeHead, SingleHead, SourceHead, ZipHead,
+                  head_links)
 
 VLEN = 128          # TPU lane count (vs 16 on the paper's vRDA)
 MACHINE_LANES = 16  # the vRDA's lanes — used by the cycle cost model
@@ -54,6 +67,17 @@ MACHINE_LANES = 16  # the vRDA's lanes — used by the cycle cost model
 _DTYPE_MASK = {"i8": 0xFF, "i16": 0xFFFF, "i32": None}
 _I64 = np.int64
 _WRAP = np.uint32   # wrap-to-32-bit helper dtype
+
+# reserved register carrying each lane's request id through every window;
+# it rides as the last payload column of every queue and is never visible
+# to compiled programs (IR variable names cannot start with "__")
+RID = "__rid"
+
+# stats attributable to individual lanes, hence to individual requests in a
+# batched launch; scheduling counters (ticks, link_tokens) are shared by the
+# whole launch and stay aggregate-only
+LANE_STATS = ("body_ops", "dram_reads", "dram_writes", "sram_reads",
+              "sram_writes", "atomics", "allocs", "frees")
 
 
 class VectorDeadlock(RuntimeError):
@@ -112,8 +136,18 @@ class _Queue:
 
 @dataclass
 class _FBState:
-    mode: str = "fwd"
-    pending: int | None = None
+    """One loop-header *session*: the wave protocol for one group in flight.
+    Batched launches key sessions by request id (the group's rid), so
+    independent requests' groups circulate in the loop concurrently — their
+    lanes share windows — while each request's own groups stay serial.
+
+    Modes: ``drain`` (waves circulating) -> ``wait`` (empty wave seen; the
+    release barrier is *held* until every earlier-arrived session has
+    released, so barrier order on every downstream link stays program order
+    — concurrent sessions must not let completion order leak into the
+    stream) -> ``echo`` (release emitted, awaiting its round trip)."""
+    mode: str = "drain"        # "drain" | "wait" | "echo"
+    pending: int = 0
     got_data: bool = False
 
 
@@ -136,15 +170,27 @@ class VectorVM:
     def __init__(self, g: DFG, dram_init: dict[str, np.ndarray] | None = None,
                  queue_cap: int = 1 << 16, vlen: int = VLEN,
                  pool_override: dict[str, int] | None = None,
-                 backend: str | ExecutorBackend | None = "numpy"):
+                 backend: str | ExecutorBackend | None = "numpy",
+                 n_requests: int = 1):
+        if n_requests < 1:
+            raise ValueError(f"n_requests must be >= 1, got {n_requests}")
         self.g = g
         self.vlen = vlen
         self.backend = make_backend(backend)
+        self.n_requests = int(n_requests)
+        # every queue carries one extra payload column: the lane's request id
         self.queues: dict[int, _Queue] = {
-            lid: _Queue(len(l.vars), queue_cap) for lid, l in g.links.items()}
-        self.source = _Queue(len(getattr(g, "source_vars", ())), 64)
+            lid: _Queue(len(l.vars) + 1, queue_cap)
+            for lid, l in g.links.items()}
+        self.source = _Queue(len(getattr(g, "source_vars", ())) + 1,
+                             max(64, self.n_requests + 1))
+        # per-request logical size; the backing array is n_requests * that,
+        # request r owning the window [r*size, (r+1)*size)
+        self._dram_lim: dict[str, int] = {
+            name: d.size for name, d in g.dram.items()}
         self.dram: dict[str, np.ndarray] = {
-            name: np.zeros(d.size, _I64) for name, d in g.dram.items()}
+            name: np.zeros(d.size * self.n_requests, _I64)
+            for name, d in g.dram.items()}
         if dram_init:
             for name, arr in dram_init.items():
                 a = wrap_dram_init(arr, g.dram[name].dtype)
@@ -155,12 +201,26 @@ class VectorVM:
             n_bufs = (pool_override or {}).get(name, pool.n_bufs)
             self.pools[name] = np.zeros(n_bufs * pool.buf_words, _I64)
             self.free_lists[name] = collections.deque(range(n_bufs))
-        self._fb = {c.id: _FBState() for c in g.contexts.values()
-                    if isinstance(c.head, FwdBwdMergeHead)}
+        self._fb: dict[int, dict[int, _FBState]] = {
+            c.id: {} for c in g.contexts.values()
+            if isinstance(c.head, FwdBwdMergeHead)}
+        # cross-request group mixing in loops is only legal when no consumer
+        # attributes pre-loop structure to values (see loop_mixing_hazards);
+        # the analysis depends only on the immutable graph, so memoize it on
+        # the DFG for the continuous-serving path (one VM per step_batch)
+        if self.n_requests > 1:
+            hazards = getattr(g, "_mixing_hazards", None)
+            if hazards is None:
+                hazards = g._mixing_hazards = loop_mixing_hazards(g)
+            self._parallel_loops = not hazards
+        else:
+            self._parallel_loops = False
         self._cs = {c.id: _CounterState() for c in g.contexts.values()
                     if isinstance(c.head, CounterHead)}
         self._red: dict[tuple[int, int], _RedState] = {}
-        self._rr: dict[int, int] = {}
+        # round-robin replicate steering: ctx id (solo) or (ctx id, rid)
+        # (batched — steering must stay batch-invariant per request)
+        self._rr: dict = {}
         for c in g.contexts.values():
             for oi, o in enumerate(c.outs):
                 if o.kind == "reduce":
@@ -168,11 +228,26 @@ class VectorVM:
         self.stats: collections.Counter = collections.Counter()
         self.ctx_lane_cycles: collections.Counter = collections.Counter()
         self.ctx_busy_cycles: collections.Counter = collections.Counter()
+        # per-request attribution (batched launches only; the single-request
+        # path keeps its historical zero-overhead accounting)
+        self._rid_counters: dict[str, np.ndarray] = {}
+        self._rid_ctx_lanes: dict[int, np.ndarray] = {}
 
     # ------------------------------------------------------------------ memory
     def _mask_arr(self, space: str, v: np.ndarray) -> np.ndarray:
         m = _DTYPE_MASK[self.g.dram[space].dtype]
         return _w32(v) if m is None else (v & m)
+
+    def _attr(self, key: str, rids: np.ndarray, weight: int = 1) -> None:
+        """Attribute ``len(rids)`` counted events (times ``weight``) to their
+        requests. Only called on batched launches, and only with data-lane
+        rids (barrier lanes carry best-effort ids and are never counted)."""
+        if len(rids) == 0:
+            return
+        arr = self._rid_counters.get(key)
+        if arr is None:
+            arr = self._rid_counters[key] = np.zeros(self.n_requests, _I64)
+        arr += np.bincount(rids, minlength=self.n_requests) * weight
 
     # ------------------------------------------------------------------- body
     def _exec_body(self, ctx: Context, kinds: np.ndarray,
@@ -183,6 +258,8 @@ class VectorVM:
         data = kinds == 0
         n = len(kinds)
         be = self.backend
+        rid = regs[RID]
+        batched = self.n_requests > 1
         for op in ctx.body:
             k = op.op
             if k == "const":
@@ -208,6 +285,8 @@ class VectorVM:
                 out[ok] = mem[addr[ok]]
                 regs[op.dst] = out
                 self.stats["sram_reads"] += int(ok.sum())
+                if batched:
+                    self._attr("sram_reads", rid[ok])
             elif k == "sram_store":
                 pool = self.g.pools[op.space]
                 mem = self.pools[op.space]
@@ -218,25 +297,39 @@ class VectorVM:
                 # in-order scatter: later lanes win on duplicate addresses
                 mem[addr[ok]] = _w32(regs[op.srcs[2]])[ok]
                 self.stats["sram_writes"] += int(ok.sum())
+                if batched:
+                    self._attr("sram_writes", rid[ok])
             elif k == "dram_load":
                 a = self.dram[op.space]
+                lim = self._dram_lim[op.space]
                 addr = regs[op.srcs[0]]
-                ok = data & (addr >= 0) & (addr < a.size)
+                # bounds are per-request: a stray address must read zeros,
+                # never a neighboring request's slice
+                ok = data & (addr >= 0) & (addr < lim)
+                if batched:
+                    addr = addr + rid * lim
                 out = np.zeros(n, _I64)
                 out[ok] = a[addr[ok]]
                 regs[op.dst] = out
                 self.stats["dram_reads"] += int(ok.sum())
+                if batched:
+                    self._attr("dram_reads", rid[ok])
             elif k == "dram_store":
                 a = self.dram[op.space]
+                lim = self._dram_lim[op.space]
                 addr = regs[op.srcs[0]]
-                ok = data & (addr >= 0) & (addr < a.size)
+                ok = data & (addr >= 0) & (addr < lim)
+                if batched:
+                    addr = addr + rid * lim
                 if op.pred is not None:
                     ok &= regs[op.pred] != 0
                 a[addr[ok]] = self._mask_arr(op.space, regs[op.srcs[1]][ok])
                 self.stats["dram_writes"] += int(ok.sum())
+                if batched:
+                    self._attr("dram_writes", rid[ok])
             elif k == "atomic_add":
                 regs[op.dst] = self._atomic_add(op.space, regs[op.srcs[0]],
-                                                regs[op.srcs[1]], data)
+                                                regs[op.srcs[1]], data, rid)
             elif k == "alloc":
                 fl = self.free_lists[op.space]
                 need = int(data.sum())
@@ -249,31 +342,52 @@ class VectorVM:
                     ptrs[i] = fl.popleft()
                 regs[op.dst] = ptrs
                 self.stats["allocs"] += need
+                if batched:
+                    self._attr("allocs", rid[data])
             elif k == "free":
                 fl = self.free_lists[op.space]
                 for p in regs[op.srcs[0]][data]:
                     fl.append(int(p))
                 self.stats["frees"] += int(data.sum())
+                if batched:
+                    self._attr("frees", rid[data])
             elif k == "rr_counter":
-                base = self._rr.get(ctx.id, 0)
                 seq = np.zeros(n, _I64)
                 idxs = np.nonzero(data)[0]
-                seq[idxs] = (base + np.arange(len(idxs))) % op.imm
-                self._rr[ctx.id] = base + len(idxs)
+                if batched:
+                    # replicate steering is per-request: each request's lanes
+                    # see the same round-robin sequence as in a solo run,
+                    # keeping its copy routing batch-invariant
+                    rids_d = rid[idxs]
+                    for r in np.unique(rids_d):
+                        m = idxs[rids_d == r]
+                        base = self._rr.get((ctx.id, int(r)), 0)
+                        seq[m] = (base + np.arange(len(m))) % op.imm
+                        self._rr[(ctx.id, int(r))] = base + len(m)
+                else:
+                    base = self._rr.get(ctx.id, 0)
+                    seq[idxs] = (base + np.arange(len(idxs))) % op.imm
+                    self._rr[ctx.id] = base + len(idxs)
                 regs[op.dst] = seq
             else:
                 raise NotImplementedError(k)
         self.stats["body_ops"] += len(ctx.body) * int(data.sum())
+        if batched and ctx.body:
+            self._attr("body_ops", rid[data], weight=len(ctx.body))
         return True
 
     def _atomic_add(self, space: str, addr: np.ndarray, delta: np.ndarray,
-                    data: np.ndarray) -> np.ndarray:
+                    data: np.ndarray, rid: np.ndarray) -> np.ndarray:
         """Vectorized fetch-and-add with *sequential-within-window* semantics:
         lane i observes the sum of all earlier lanes' deltas on its address."""
         a = self.dram[space]
+        lim = self._dram_lim[space]
         n = len(addr)
         old = np.zeros(n, _I64)
-        ok = data & (addr >= 0) & (addr < a.size)
+        ok = data & (addr >= 0) & (addr < lim)
+        if self.n_requests > 1:
+            addr = addr + rid * lim
+            self._attr("atomics", rid[ok])
         idxs = np.nonzero(ok)[0]
         if len(idxs) == 0:
             return old
@@ -302,9 +416,16 @@ class VectorVM:
         """Send a processed window through every output (vectorized tail)."""
         n = len(kinds)
         data = kinds == 0
+        rid = regs[RID]
         self.ctx_lane_cycles[ctx.id] += n
         self.ctx_busy_cycles[ctx.id] += max(
             -(-n // MACHINE_LANES), 1) if n else 0
+        if self.n_requests > 1 and bool(data.any()):
+            lanes = self._rid_ctx_lanes.get(ctx.id)
+            if lanes is None:
+                lanes = self._rid_ctx_lanes[ctx.id] = \
+                    np.zeros(self.n_requests, _I64)
+            lanes += np.bincount(rid[data], minlength=self.n_requests)
         be = self.backend
         for oi, o in enumerate(ctx.outs):
             q = self.queues[o.link]
@@ -319,9 +440,17 @@ class VectorVM:
                 # pass output, or barrier-only window: barriers reach all outs
                 keep = None
             if o.values and bool(data.any()):
-                payload = np.stack([regs[v] for v in o.values], axis=1)
+                # the request-id column rides every payload so compaction
+                # and barrier lowering keep lane->request attribution
+                # aligned (it is all-zero on single-request launches)
+                payload = np.stack([regs[v] for v in o.values] + [rid],
+                                   axis=1)
+            elif self.n_requests > 1:
+                # barrier-only / valueless windows still carry rid stamps
+                payload = np.stack(
+                    [np.zeros(n, _I64)] * (q.nvars - 1) + [rid], axis=1)
             else:
-                payload = None
+                payload = None    # single-request fast path: zeros suffice
             out_kinds = kinds
             if keep is not None:
                 out_kinds, payload = be.compact(keep, out_kinds, payload)
@@ -337,13 +466,29 @@ class VectorVM:
         (= kernels/segment_reduce semantics), dispatched to the backend."""
         st = self._red[(ctx.id, oi)]
         vals = regs[o.values[0]] if o.values else None
+        group_open_in = st.group_open
         out_kinds, out_vals, st.acc, st.group_open = \
             self.backend.segment_reduce(kinds, vals, o.reduce_op,
-                                        o.reduce_init, st.acc, st.group_open)
+                                        o.reduce_init, st.acc, group_open_in)
+        if self.n_requests > 1:
+            # the emission pattern is a pure function of (kinds, group_open);
+            # recompute it host-side so each emitted token inherits the
+            # request id of the barrier that closed its group (empty groups
+            # included); skipped on single-request launches (rid is 0)
+            emit, lower, _open, _seg, _bar = \
+                segment_emit_pattern(kinds, group_open_in)
+            bar_rids = regs[RID][kinds > 0]
+            keep2 = np.empty(2 * len(bar_rids), bool)
+            keep2[0::2] = emit
+            keep2[1::2] = lower
+            out_rids = np.repeat(bar_rids, 2)[keep2]
+            assert len(out_rids) == len(out_kinds), \
+                f"{ctx.name}: reduce emission pattern diverged from backend"
+        else:
+            out_rids = np.zeros(len(out_kinds), _I64)
         q = self.queues[o.link]
-        q.push(out_kinds,
-               out_vals.reshape(-1, 1)
-               if q.nvars else np.zeros((len(out_kinds), 0), _I64))
+        cols = ([out_vals] if q.nvars > 1 else []) + [out_rids]
+        q.push(out_kinds, np.stack(cols, axis=1))
         self.stats["link_tokens", o.link] += len(out_kinds)
 
     # ------------------------------------------------------------------- heads
@@ -382,6 +527,7 @@ class VectorVM:
             return False
         kinds, vals = q.peek(n)
         regs = {v: vals[:, i].copy() for i, v in enumerate(vars)}
+        regs[RID] = vals[:, -1].copy()
         assert self._exec_body(ctx, kinds, regs)
         self._route_window(ctx, kinds.copy(), regs)
         q.pop(n)
@@ -426,6 +572,9 @@ class VectorVM:
         for (ks, vals), link in zip(peeked, links):
             for i, v in enumerate(link.vars):
                 regs[v] = vals[:L, i].copy()
+        # aligned lanes belong to the same thread on every zipped link, so
+        # any link's request-id column works; take the first
+        regs[RID] = peeked[0][1][:L, -1].copy()
         assert self._exec_body(ctx, kinds, regs)
         self._route_window(ctx, kinds, regs)
         for q in qs:
@@ -460,8 +609,10 @@ class VectorVM:
                 if ka[0] != kb[0]:
                     raise VectorDeadlock(
                         f"merge barrier mismatch in {ctx.name}")
+                row = np.zeros((1, len(vars_a) + 1), _I64)
+                row[0, -1] = va[0, -1]    # barrier keeps its request id
                 out_kinds.append(ka[:1].copy())
-                out_vals.append(np.zeros((1, len(vars_a)), _I64))
+                out_vals.append(row)
                 qa.pop(1)
                 qb.pop(1)
                 emitted += 1
@@ -470,9 +621,9 @@ class VectorVM:
         if emitted == 0:
             return False
         kinds = np.concatenate(out_kinds)
-        vals = np.concatenate(out_vals) if len(vars_a) else \
-            np.zeros((emitted, 0), _I64)
+        vals = np.concatenate(out_vals)
         regs = {v: vals[:, i].copy() for i, v in enumerate(vars_a)}
+        regs[RID] = vals[:, -1].copy()
         if self._alloc_limit(ctx, kinds) < len(kinds):
             raise VectorDeadlock(f"alloc stall inside merge {ctx.name}; "
                                  "size the pool above the merge fan-in")
@@ -481,87 +632,129 @@ class VectorVM:
         return True
 
     def _fire_fwdbwd(self, ctx, h: FwdBwdMergeHead, room) -> bool:
-        st = self._fb[ctx.id]
+        """Natural-loop header with per-request wave *sessions* (§III-B(d)).
+
+        Each group in flight is one :class:`_FBState` session keyed by the
+        group barrier's request id. In a batched launch with
+        ``_parallel_loops``, sessions of different requests overlap: their
+        lanes recirculate in shared windows and each session's wave markers
+        (stamped with its rid) are dispatched to its own state. Per-request
+        token order is FIFO-preserved everywhere, so each session sees
+        exactly the serial protocol. Forward intake stalls at the first
+        token whose request already has an active session (a request's own
+        groups never overlap); in serial mode (single request, or a graph
+        with mixing hazards) *any* active session stalls intake — which is
+        exactly the historical one-group-at-a-time protocol."""
+        states = self._fb[ctx.id]
         qf, qb = self.queues[h.fwd], self.queues[h.back]
         vars_f = self.g.links[h.fwd].vars
         progress = False
         budget = min(self.vlen, room)
         while budget > 0:
-            if st.mode == "fwd":
-                # eager interleave: drain recirculating data first so loop
-                # threads can retire (and free buffers) before the group's
-                # barrier has cleared the upstream allocator (§III-B(d))
-                kb, vb = qb.peek(budget)
-                brun = self.backend.data_run(kb)
-                if brun:
-                    done = self._process_run(ctx, vars_f, kb[:brun],
-                                             vb[:brun])
-                    if done:
-                        qb.pop(done)
-                        budget -= done
-                        progress = True
-                        continue
-                k, v = qf.peek(budget)
-                if len(k) == 0:
-                    return progress
-                run = self.backend.data_run(k)
-                if run:
-                    done = self._process_run(ctx, vars_f, k[:run], v[:run])
-                    if done == 0:
-                        return progress
-                    qf.pop(done)
-                    budget -= done
-                    progress = True
+            # -- ordered releases: the oldest completed session emits its
+            # held group barrier once every earlier session has emitted
+            released = False
+            for rid_, st_ in states.items():
+                if st_.mode == "echo":
                     continue
-                # group barrier
-                self._route_window(ctx, np.array([1], _I64),
-                                   _empty_regs(vars_f))
-                st.pending = int(k[0])
-                st.mode = "drain"
-                st.got_data = False
-                qf.pop(1)
-                budget -= 1
-                progress = True
-            elif st.mode == "drain":
-                k, v = qb.peek(budget)
-                if len(k) == 0:
-                    return progress
-                run = self.backend.data_run(k)
-                if run:
-                    done = self._process_run(ctx, vars_f, k[:run], v[:run])
-                    if done == 0:
-                        return progress
-                    qb.pop(done)
-                    st.got_data = True
-                    budget -= done
-                    progress = True
-                    continue
-                if k[0] != 1:
-                    raise VectorDeadlock(f"{ctx.name}: bad backedge barrier")
-                qb.pop(1)
-                if st.got_data:
-                    self._route_window(ctx, np.array([1], _I64),
-                                       _empty_regs(vars_f))
-                    st.got_data = False
-                else:
+                if st_.mode == "wait":
                     self._route_window(ctx,
-                                       np.array([st.pending + 1], _I64),
-                                       _empty_regs(vars_f))
-                    st.mode = "echo"
-                budget -= 1
-                progress = True
-            else:   # echo
-                k, _ = qb.peek(1)
-                if len(k) == 0:
-                    return progress
-                if k[0] != st.pending + 1:
+                                       np.array([st_.pending + 1], _I64),
+                                       _empty_regs(vars_f, rid_))
+                    st_.mode = "echo"
+                    budget -= 1
+                    progress = released = True
+                break    # a draining session blocks all later releases
+            if released:
+                continue
+            # -- backedge next: drain recirculating data so loop threads
+            # retire (and free buffers) before new groups pile in
+            kb, vb = qb.peek(budget)
+            brun = self.backend.data_run(kb)
+            if brun:
+                done = self._process_run(ctx, vars_f, kb[:brun], vb[:brun])
+                if done:
+                    for r in np.unique(vb[:done, -1]):
+                        st = states.get(int(r))
+                        if st is not None:
+                            st.got_data = True
+                    qb.pop(done)
+                    budget -= done
+                    progress = True
+                    continue
+            elif len(kb):
+                # wave marker / echo for the session it is stamped with
+                lvl = int(kb[0])
+                rid = int(vb[0, -1])
+                st = states.get(rid)
+                if st is None:
+                    raise VectorDeadlock(
+                        f"{ctx.name}: backedge barrier Ω{lvl} for request "
+                        f"{rid} with no open loop session")
+                if st.mode == "drain":
+                    if lvl != 1:
+                        raise VectorDeadlock(
+                            f"{ctx.name}: bad backedge barrier")
+                    qb.pop(1)
+                    if st.got_data:
+                        self._route_window(ctx, np.array([1], _I64),
+                                           _empty_regs(vars_f, rid))
+                        st.got_data = False
+                        budget -= 1
+                    else:
+                        st.mode = "wait"    # release held for program order
+                    progress = True
+                    continue
+                if st.mode == "wait":
+                    raise VectorDeadlock(
+                        f"{ctx.name}: backedge barrier Ω{lvl} for request "
+                        f"{rid} while its release is still held")
+                # echo: the released barrier came around; session closes
+                if lvl != st.pending + 1:
                     raise VectorDeadlock(
                         f"{ctx.name}: expected Ω{st.pending + 1} echo, "
-                        f"got {k[0]}")
+                        f"got {lvl}")
                 qb.pop(1)
-                st.pending = None
-                st.mode = "fwd"
+                del states[rid]
                 progress = True
+                continue
+            # -- forward intake
+            k, v = qf.peek(budget)
+            if len(k) == 0:
+                return progress
+            run = self.backend.data_run(k)
+            if run:
+                admit = run
+                if states:
+                    if self._parallel_loops:
+                        # stall at the first lane whose request has a group
+                        # mid-flight (its data belongs to the *next* group)
+                        active = np.fromiter(states, _I64, len(states))
+                        blocked = np.isin(v[:run, -1], active)
+                        hit = np.nonzero(blocked)[0]
+                        admit = int(hit[0]) if len(hit) else run
+                    else:
+                        admit = 0
+                if admit == 0:
+                    return progress
+                done = self._process_run(ctx, vars_f, k[:admit], v[:admit])
+                if done == 0:
+                    return progress
+                qf.pop(done)
+                budget -= done
+                progress = True
+                continue
+            # group barrier: open a session for its request (unless that
+            # request — or, serially, any request — still has one open)
+            rid = int(v[0, -1])
+            if (rid in states) if self._parallel_loops else bool(states):
+                return progress
+            self._route_window(ctx, np.array([1], _I64),
+                               _empty_regs(vars_f, rid))
+            states[rid] = _FBState(mode="drain", pending=int(k[0]))
+            qf.pop(1)
+            budget -= 1
+            progress = True
         return progress
 
     def _process_run(self, ctx, vars, kinds, vals) -> int:
@@ -571,6 +764,7 @@ class VectorVM:
             return 0
         kinds, vals = kinds[:n], vals[:n]
         regs = {v: vals[:, i].copy() for i, v in enumerate(vars)}
+        regs[RID] = vals[:, -1].copy()
         assert self._exec_body(ctx, kinds, regs)
         self._route_window(ctx, kinds.copy(), regs)
         return n
@@ -595,6 +789,7 @@ class VectorVM:
                     regs = {v: np.repeat(st.base[i], emit)
                             for i, v in enumerate(vars_in)}
                     regs[h.ivar] = idx
+                    regs[RID] = np.repeat(st.base[-1], emit)
                     assert self._exec_body(ctx, kinds, regs)
                     self._route_window(ctx, kinds, regs)
                     st.cur += st.step * emit
@@ -603,9 +798,13 @@ class VectorVM:
                 if st.cur >= st.hi or st.step <= 0:
                     st.active = False
                     if h.add_level:
+                        # the group-close barrier carries the expanding
+                        # thread's request id (reduce heads key empty-group
+                        # emissions to it)
                         self._route_window(ctx, np.array([1], _I64),
                                            _empty_regs(list(vars_in)
-                                                       + [h.ivar]))
+                                                       + [h.ivar],
+                                                       int(st.base[-1])))
                         budget -= 1
                         progress = True
                 continue
@@ -625,7 +824,8 @@ class VectorVM:
             else:
                 lvl = int(k[0]) + (1 if h.add_level else 0)
                 self._route_window(ctx, np.array([lvl], _I64),
-                                   _empty_regs(list(vars_in) + [h.ivar]))
+                                   _empty_regs(list(vars_in) + [h.ivar],
+                                               int(v[0, -1])))
                 q.pop(1)
                 budget -= 1
                 progress = True
@@ -651,7 +851,9 @@ class VectorVM:
             return len(self.queues[h.a]) > 0 or len(self.queues[h.b]) > 0
         if isinstance(h, FwdBwdMergeHead):
             return (len(self.queues[h.fwd]) > 0
-                    or len(self.queues[h.back]) > 0)
+                    or len(self.queues[h.back]) > 0
+                    or any(st.mode == "wait"
+                           for st in self._fb[ctx.id].values()))
         if isinstance(h, CounterHead):
             return self._cs[ctx.id].active or len(self.queues[h.link]) > 0
         return True
@@ -671,10 +873,28 @@ class VectorVM:
         return progress
 
     def run(self, max_ticks: int = 1_000_000, **params) -> dict[str, np.ndarray]:
+        return self.run_batch([params], max_ticks=max_ticks)
+
+    def run_batch(self, params_list: list[dict],
+                  max_ticks: int = 1_000_000) -> dict[str, np.ndarray]:
+        """Run one fused launch: request r's ``main()`` parameter tuple is
+        ``params_list[r]`` and its DRAM slice is ``[r*size, (r+1)*size)`` of
+        every array (see :meth:`request_dram`). All requests' thread groups
+        interleave in the same superstep schedule — one source window admits
+        up to ``vlen`` requests at once. Returns the fused DRAM image."""
+        if len(params_list) != self.n_requests:
+            raise ValueError(
+                f"run_batch: got {len(params_list)} parameter sets for a VM "
+                f"constructed with n_requests={self.n_requests}")
         src_vars = getattr(self.g, "source_vars", ())
-        row = np.array([[ir.wrap32(int(params[p])) for p in src_vars]], _I64)
-        self.source.push(np.zeros(1, _I64), row)
-        self.source.push(np.ones(1, _I64), np.zeros((1, len(src_vars)), _I64))
+        rows = np.zeros((len(params_list), len(src_vars) + 1), _I64)
+        for r, params in enumerate(params_list):
+            rows[r, : len(src_vars)] = [ir.wrap32(int(params[p]))
+                                        for p in src_vars]
+            rows[r, -1] = r
+        self.source.push(np.zeros(len(params_list), _I64), rows)
+        self.source.push(np.ones(1, _I64),
+                         np.zeros((1, len(src_vars) + 1), _I64))
         order = list(self.g.contexts.values())
         for tick in range(max_ticks):
             progress = self._superstep(order)
@@ -688,6 +908,46 @@ class VectorVM:
         if stuck:
             raise VectorDeadlock(f"quiescent with tokens in flight: {stuck}")
         return self.dram
+
+    # ------------------------------------------------------- request splitting
+    def request_dram(self, rid: int) -> dict[str, np.ndarray]:
+        """De-interleave request ``rid``'s DRAM image out of the fused arrays
+        (shaped exactly like a single-request run's DRAM dict)."""
+        self._check_rid(rid)
+        return {name: self.dram[name][rid * sz: (rid + 1) * sz].copy()
+                for name, sz in self._dram_lim.items()}
+
+    def request_stats(self, rid: int) -> collections.Counter:
+        """Lane-attributable stats (:data:`LANE_STATS`) for one request.
+        Matches what a sequential single-request run of the same request
+        reports for those keys; scheduling counters (ticks, link_tokens) are
+        launch-global and excluded. Zero entries are omitted, so summing over
+        requests reproduces the aggregate ``stats`` restricted to
+        :data:`LANE_STATS`."""
+        self._check_rid(rid)
+        if self.n_requests == 1:
+            return collections.Counter(
+                {k: int(self.stats[k]) for k in LANE_STATS
+                 if self.stats.get(k)})
+        return collections.Counter(
+            {k: int(arr[rid]) for k, arr in sorted(self._rid_counters.items())
+             if arr[rid]})
+
+    def request_cycles(self, rid: int) -> int:
+        """Cost-model cycles attributable to one request: the issue slots its
+        lanes occupy on the busiest context. For a single-request launch this
+        is the exact :meth:`estimated_cycles`; in a batch it is the request's
+        share (a lower bound — barrier-only slots stay launch-global)."""
+        self._check_rid(rid)
+        if self.n_requests == 1:
+            return self.estimated_cycles()
+        return max((-(-int(arr[rid]) // MACHINE_LANES)
+                    for arr in self._rid_ctx_lanes.values()), default=0)
+
+    def _check_rid(self, rid: int) -> None:
+        if not 0 <= rid < self.n_requests:
+            raise IndexError(f"request id {rid} out of range "
+                             f"[0, {self.n_requests})")
 
     # ------------------------------------------------------------- cost model
     def estimated_cycles(self) -> int:
@@ -704,5 +964,94 @@ class VectorVM:
         return useful / issued if issued else 1.0
 
 
-def _empty_regs(vars) -> dict[str, np.ndarray]:
-    return {v: np.zeros(1, _I64) for v in vars}
+def _empty_regs(vars, rid: int = 0) -> dict[str, np.ndarray]:
+    regs = {v: np.zeros(1, _I64) for v in vars}
+    regs[RID] = np.full(1, rid, _I64)
+    return regs
+
+
+# ---------------------------------------------------------------------------
+# Batch-mixing safety analysis
+# ---------------------------------------------------------------------------
+
+def loop_mixing_hazards(g: DFG) -> list[str]:
+    """Static reasons why cross-request group mixing in loops is unsafe.
+
+    When loop sessions of different requests overlap, tokens *downstream of a
+    loop header* interleave across requests while per-request order is
+    preserved. That is invisible to order-insensitive consumers (element-wise
+    bodies, filters, forward merges — which only align identical barrier
+    sequences — and counters, whose sub-group structure is created locally
+    per input token). It corrupts exactly two patterns:
+
+    * a **value-carrying reduce** that segments structure created *upstream*
+      of the loop (input depth <= the loop's backedge depth): lanes of
+      request s that interleave before request r's group barrier would fold
+      into r's accumulator;
+    * a **zip of loop-ordered and program-ordered streams** whose values are
+      actually consumed: session completion order need not match program
+      order, so pairs would misalign.
+
+    Valueless instances of both (the lowered ``foreach.join`` completion
+    pattern) only count tokens per group, which is order-independent — they
+    stay safe. Returns a list of human-readable hazards; empty means a
+    batched VM may run loop sessions of different requests concurrently."""
+    hazards: list[str] = []
+    succ: dict[int, set[int]] = {cid: set() for cid in g.contexts}
+    for c in g.contexts.values():
+        for o in c.outs:
+            dst = g.links[o.link].dst
+            if dst is not None:
+                succ[c.id].add(dst)
+    for head_ctx in g.contexts.values():
+        if not isinstance(head_ctx.head, FwdBwdMergeHead):
+            continue
+        bdepth = g.links[head_ctx.head.back].depth
+        cone: set[int] = set()
+        stack = [head_ctx.id]
+        while stack:
+            x = stack.pop()
+            for y in succ[x]:
+                if y not in cone:
+                    cone.add(y)
+                    stack.append(y)
+        for cid in sorted(cone):
+            c = g.contexts[cid]
+            in_depth = max((g.links[l].depth for l in head_links(c.head)),
+                           default=0)
+            for o in c.outs:
+                if o.kind == "reduce" and in_depth <= bdepth \
+                        and _link_values_read(g, o.link):
+                    hazards.append(
+                        f"{c.name}: value-carrying reduce over pre-loop "
+                        f"structure (depth {in_depth} <= {bdepth}) "
+                        f"downstream of loop {head_ctx.name}")
+            if isinstance(c.head, ZipHead):
+                inside = [g.links[l].src == head_ctx.id
+                          or g.links[l].src in cone
+                          for l in c.head.links]
+                if any(inside) and not all(inside) \
+                        and (c.body or any(o.values for o in c.outs)):
+                    hazards.append(
+                        f"{c.name}: zip joins loop-ordered and "
+                        f"program-ordered streams and consumes values "
+                        f"(downstream of loop {head_ctx.name})")
+    return hazards
+
+
+def _link_values_read(g: DFG, link_id: int) -> bool:
+    """Do any of this link's payload vars feed computation at the consumer?"""
+    link = g.links[link_id]
+    if not link.vars or link.dst is None:
+        return False
+    c = g.contexts[link.dst]
+    reads: set[str] = set()
+    for op in c.body:
+        reads.update(op.srcs)
+        if op.pred:
+            reads.add(op.pred)
+    for o in c.outs:
+        reads.update(o.values)
+        if o.pred:
+            reads.add(o.pred)
+    return bool(set(link.vars) & reads)

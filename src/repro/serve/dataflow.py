@@ -13,6 +13,14 @@ share one DFG and one backend instance, and because backends are stateless
 one Pallas jit cache serves every queue.  Only the VM (queues, DRAM, pools)
 is per-request state.  Passing a raw ``lang.Prog`` still works as a shim and
 compiles on the spot, exactly as before the ``repro.api`` redesign.
+
+``step()`` serves one request per VectorVM launch; ``step_batch(max_batch=)``
+fuses whatever the queue holds (arrival order, partial batches fine) into a
+*single* launch whose superstep scheduler interleaves lanes from every
+request — the Revet move (§III: threads are lanes) applied across requests,
+and the same continuous-batching shape ``serve/engine.py`` uses for LLM
+decode. Responses are bit-identical either way; batched responses carry
+per-request lane-attributable stats (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -22,7 +30,7 @@ from typing import Optional, Union
 
 import numpy as np
 
-from ..api import CompiledProgram, RunReport
+from ..api import CompiledProgram, RunReport, run_fused
 from ..core.backend import ExecutorBackend, make_backend
 from ..core.compiler import CompileOptions, CompileResult, compile_program
 from ..core.vector_vm import VectorVM
@@ -108,19 +116,58 @@ class DataflowEngine:
                           queue_cap=self.queue_cap, backend=self.backend)
             t0 = time.perf_counter()
             dram = vm.run(**req.params)
-            report = RunReport(
-                executor="vector", backend=vm.backend.name,
-                wall_s=time.perf_counter() - t0, stats=vm.stats,
-                cycles=vm.estimated_cycles(),
-                lane_occupancy=vm.lane_occupancy())
+            report = RunReport.from_vm(vm, "vector",
+                                       time.perf_counter() - t0)
         resp = DataflowResponse(req.rid, dram, report)
         self.agg.update(report.stats)
         self.done.append(resp)
         return resp
 
-    def drain(self) -> list[DataflowResponse]:
+    def step_batch(self, max_batch: int = 8) -> list[DataflowResponse]:
+        """Serve up to ``max_batch`` queued requests in **one** fused
+        VectorVM launch (continuous admission: whatever the queue holds, in
+        arrival order — partial batches included; an empty queue serves
+        nothing). Each response carries its de-interleaved DRAM slice and a
+        per-request :class:`~repro.api.RunReport`; the DRAM contents are
+        bit-identical to serving the same requests through :meth:`step`."""
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        batch = [self.queue.popleft()
+                 for _ in range(min(max_batch, len(self.queue)))]
+        if not batch:
+            return []
+        reqs = [(dict(r.dram_init or {}), r.params) for r in batch]
+        if self.compiled is not None:
+            bx = self.compiled.execute_batch(
+                reqs, require_inputs=False, backend=self.backend,
+                queue_cap=self.queue_cap)
+            responses = [DataflowResponse(req.rid, ex.dram, ex.report)
+                         for req, ex in zip(batch, bx)]
+            launch_stats = bx.report.stats
+        else:
+            # raw-Prog shim: same fused launch, one layer lower
+            vm, wall = run_fused(self.result, self.backend, reqs,
+                                 queue_cap=self.queue_cap)
+            responses = [
+                DataflowResponse(req.rid, vm.request_dram(rid),
+                                 RunReport.for_request(vm, rid, wall))
+                for rid, req in enumerate(batch)]
+            launch_stats = vm.stats
+        # aggregate the *launch* stats once (lane counters equal the sum of
+        # the per-request views, and scheduling counters — ticks, link
+        # tokens — stay comparable with sequential step() aggregation)
+        self.agg.update(launch_stats)
+        self.done.extend(responses)
+        return responses
+
+    def drain(self, max_batch: int = 1) -> list[DataflowResponse]:
+        """Serve until the queue is empty — one request at a time by
+        default, or in fused batches of up to ``max_batch``."""
         while self.queue:
-            self.step()
+            if max_batch > 1:
+                self.step_batch(max_batch)
+            else:
+                self.step()
         return self.done
 
     def stats(self) -> dict:

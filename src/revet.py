@@ -6,19 +6,21 @@ pass-pipeline surface: ``revet.register_pass`` slots user passes into the
 same registry the builtin pipeline runs from) plus the handful of
 language/compiler names a program author needs.
 """
-from repro.api import (ArraySpec, CacheInfo, CompiledProgram, Execution,
-                       Lowered, PassManager, PipelineReport, ProgramFn,
-                       RunReport, Traced, VerificationError, available_passes,
-                       cache_info, clear_cache, compile, lower, program,
-                       register_pass, spec, trace, verify_program)
+from repro.api import (ArraySpec, BatchExecution, CacheInfo, CompiledProgram,
+                       Execution, Lowered, PassManager, PipelineReport,
+                       ProgramFn, RunReport, Traced, VerificationError,
+                       available_passes, cache_info, clear_cache, compile,
+                       fuse_dram_images, lower, program, register_pass,
+                       run_fused, spec, trace, verify_program)
 from repro.core.compiler import DEFAULT_PIPELINE, CompileOptions
 from repro.core.lang import Block, E, Prog, c, select
 
 __all__ = [
-    "ArraySpec", "Block", "CacheInfo", "CompileOptions", "CompiledProgram",
-    "DEFAULT_PIPELINE", "E", "Execution", "Lowered", "PassManager",
-    "PipelineReport", "Prog", "ProgramFn", "RunReport", "Traced",
-    "VerificationError", "available_passes", "c", "cache_info",
-    "clear_cache", "compile", "lower", "program", "register_pass", "select",
-    "spec", "trace", "verify_program",
+    "ArraySpec", "BatchExecution", "Block", "CacheInfo", "CompileOptions",
+    "CompiledProgram", "DEFAULT_PIPELINE", "E", "Execution", "Lowered",
+    "PassManager", "PipelineReport", "Prog", "ProgramFn", "RunReport",
+    "Traced", "VerificationError", "available_passes", "c", "cache_info",
+    "clear_cache", "compile", "fuse_dram_images", "lower", "program",
+    "register_pass", "run_fused", "select", "spec", "trace",
+    "verify_program",
 ]

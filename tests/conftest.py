@@ -12,6 +12,17 @@ from __future__ import annotations
 import sys
 import types
 
+import pytest
+
+
+@pytest.fixture(scope="session")
+def jax_backend():
+    """One shared JaxBackend (and jit cache) for every suite that crosses
+    the kernel route — backends are stateless (DESIGN.md §3)."""
+    from repro.core.backend import JaxBackend
+    return JaxBackend()
+
+
 try:
     import hypothesis  # noqa: F401  (real package wins when installed)
 except ModuleNotFoundError:

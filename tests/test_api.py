@@ -282,3 +282,62 @@ def test_apps_api_bit_identical_and_cached(name, backend, jax_jnp):
     assert ci.misses == 1 and ci.hits == 1, f"{name}: recompiled ({ci})"
     for k in want:
         np.testing.assert_array_equal(run2.dram[k], want[k])
+
+
+# ---------------------------------------------------------------------------
+# execute_batch: the fused-launch API surface
+# ---------------------------------------------------------------------------
+
+def test_execute_batch_single_request_equals_execute():
+    fn = _make_doubler()
+    xs = np.arange(6)
+    compiled = revet.compile(fn, xs, n=6)
+    solo = compiled.execute({"src": xs}, {"n": 6})
+    batch = compiled.execute_batch([({"src": xs}, {"n": 6})])
+    assert len(batch) == 1
+    np.testing.assert_array_equal(batch[0].outputs[0], solo.outputs[0])
+    assert batch[0].report.rid == 0
+    assert batch[0].report.stats == solo.vm.request_stats(0)
+    # aggregate report covers the launch; batch iterates per request
+    assert batch.report.rid is None and batch.report.executor == "vector"
+    assert batch.vm.n_requests == 1
+
+
+def test_execute_batch_validation_errors():
+    fn = _make_doubler()
+    xs = np.arange(6)
+    compiled = revet.compile(fn, xs, n=6)
+    with pytest.raises(ValueError, match="at least one request"):
+        compiled.execute_batch([])
+    with pytest.raises(ValueError, match="shape-specialized"):
+        compiled.execute_batch([({"src": xs}, {"n": 6}),
+                                ({"src": np.arange(9)}, {"n": 9})])
+    with pytest.raises(TypeError, match="missing scalar param"):
+        compiled.execute_batch([({"src": xs}, {})])
+    with pytest.raises(TypeError, match="missing input array"):
+        compiled.execute_batch([({}, {"n": 6})])
+    # the serving path admits missing inputs explicitly (slice stays zero)
+    bx = compiled.execute_batch([({}, {"n": 6})], require_inputs=False)
+    np.testing.assert_array_equal(bx[0].outputs[0], np.zeros(6, np.int64))
+    # ...but unknown array names still fail loudly, like the sequential
+    # path's KeyError at VM init — never a silent zero-slice run
+    with pytest.raises(KeyError, match="unknown DRAM array"):
+        compiled.execute_batch([({"srcc": xs}, {"n": 6})],
+                               require_inputs=False)
+
+
+def test_execute_batch_deinterleaves_divergent_inputs():
+    fn = _make_doubler()
+    compiled = revet.compile(fn, np.arange(6), n=6)
+    images = [np.arange(6) + 10 * r for r in range(4)]
+    bx = compiled.execute_batch([({"src": img}, {"n": 6}) for img in images])
+    for ex, img in zip(bx, images):
+        np.testing.assert_array_equal(ex.outputs[0], img * 2)
+    # per-request lane stats sum to the launch aggregate
+    import collections
+    from repro.core.vector_vm import LANE_STATS
+    total = collections.Counter()
+    for ex in bx:
+        total.update(ex.report.stats)
+    assert total == collections.Counter(
+        {k: bx.vm.stats[k] for k in LANE_STATS if bx.vm.stats.get(k)})
