@@ -10,6 +10,9 @@ the executor-backend suite.
         BENCH_compile.json (per-pass wall time + IR node deltas per app)
     PYTHONPATH=src python -m benchmarks.run --only serve      # writes
         BENCH_serve.json (batched vs sequential serving throughput)
+    PYTHONPATH=src python -m benchmarks.run --only place      # writes
+        BENCH_place.json (placement resource reports + throughput vs
+        replica count; see benchmarks/place_bench.py env knobs)
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark cell.
 """
@@ -24,12 +27,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table4,table5,fig12,fig13,"
-                         "fig14,roofline,vectorvm,micro,api,compile,serve")
+                         "fig14,roofline,vectorvm,micro,api,compile,serve,"
+                         "place")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from . import (api_bench, backends, compile_bench, figures, roofline,
-                   serve_bench, tables)
+    from . import (api_bench, backends, compile_bench, figures, place_bench,
+                   roofline, serve_bench, tables)
     benches = {
         "table3": tables.table3_apps,
         "table4": tables.table4_resources,
@@ -43,6 +47,7 @@ def main() -> None:
         "api": api_bench.api_dispatch,
         "compile": compile_bench.compile_pipeline,
         "serve": serve_bench.serve_batching,
+        "place": place_bench.place_replication,
     }
     if only:
         unknown = only - set(benches)

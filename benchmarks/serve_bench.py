@@ -5,8 +5,17 @@ Table III app on both executor backends, comparing sequential serving
 (``step()`` per request) against fused batched serving
 (``step_batch(max_batch=B)``) at batch sizes 1/4/8/16, verifying the batched
 responses' DRAM bit-identical to the sequential ones, and writes
-``BENCH_serve.json``. This is the PR's acceptance artifact: batch=8 must be
->= 2x sequential throughput on at least two apps on the numpy backend.
+``BENCH_serve.json``. Acceptance: batch=8 must be >= 2x sequential
+throughput on at least two apps on the numpy backend, and **no** cell may
+fall below 0.9x sequential on either backend.
+
+Cells are timed best-of-``REPEATS`` after a warm pass: a serving deployment
+warms each launch-size bucket once at startup (``DataflowEngine.warmup``;
+the engine's bucket padding keeps the set of jit launch shapes finite on
+jax), so steady-state throughput — not first-call jit compilation — is the
+thing to measure.  The historical single-cold-pass protocol is what made
+hash_table/jax look like 0.16x at batch=4: the cell was timing XLA
+recompiles for window widths first seen mid-run, not serving.
 """
 from __future__ import annotations
 
@@ -21,9 +30,11 @@ from repro.serve.dataflow import DataflowEngine, DataflowRequest
 
 BENCH_JSON = "BENCH_serve.json"
 BATCH_SIZES = (1, 4, 8, 16)
+REPEATS = 2
 ACCEPT_BATCH = 8     # the acceptance cell:
 ACCEPT_SPEEDUP = 2.0  # batch=8 >= 2x sequential ...
 ACCEPT_MIN_APPS = 2   # ... on >= this many apps (numpy backend)
+MIN_SPEEDUP = 0.9    # no batch point below this, either backend
 
 
 def _submit(engine: DataflowEngine, app, n: int) -> None:
@@ -32,22 +43,30 @@ def _submit(engine: DataflowEngine, app, n: int) -> None:
 
 
 def _bench_cell(compiled, app, batch: int) -> dict:
-    eng_seq = DataflowEngine(compiled)
-    _submit(eng_seq, app, batch)
-    t0 = time.perf_counter()
-    while eng_seq.queue:
-        eng_seq.step()
-    t_seq = time.perf_counter() - t0
+    def seq_pass():
+        eng = DataflowEngine(compiled, bucket_sizes=None)
+        _submit(eng, app, batch)
+        t0 = time.perf_counter()
+        while eng.queue:
+            eng.step()
+        return time.perf_counter() - t0, eng.done
 
-    eng_bat = DataflowEngine(compiled)
-    _submit(eng_bat, app, batch)
-    t0 = time.perf_counter()
-    responses = eng_bat.step_batch(max_batch=batch)
-    t_bat = time.perf_counter() - t0
+    def bat_pass():
+        eng = DataflowEngine(compiled)
+        _submit(eng, app, batch)
+        t0 = time.perf_counter()
+        responses = eng.step_batch(max_batch=batch)
+        return time.perf_counter() - t0, responses
+
+    seq_pass(), bat_pass()                    # warm both paths
+    t_seq, seq_done = min((seq_pass() for _ in range(REPEATS)),
+                          key=lambda x: x[0])
+    t_bat, responses = min((bat_pass() for _ in range(REPEATS)),
+                           key=lambda x: x[0])
 
     match = len(responses) == batch and all(
         np.array_equal(s.dram[k], b.dram[k])
-        for s, b in zip(eng_seq.done, responses) for k in s.dram)
+        for s, b in zip(seq_done, responses) for k in s.dram)
     return {
         "seq_s": round(t_seq, 4),
         "batch_s": round(t_bat, 4),
@@ -70,11 +89,15 @@ def serve_batching(rows: list[dict], out_path: str = BENCH_JSON) -> None:
         for label, be in (("numpy", "numpy"), ("jax", jax_be)):
             compiled = revet.compile(app.fn, **app.dram_init, **app.params,
                                      **app.statics, backend=be)
-            # warm both paths (jit caches see sequential + fused widths)
+            # deployment-style warmup: one launch per configured bucket size
+            # (bounded by the engine's bucket padding), so the timed cells
+            # measure steady-state serving, not first-call jit compiles
             warm = DataflowEngine(compiled)
-            _submit(warm, app, 2)
+            _submit(warm, app, 1)
+            warm.warmup(buckets=tuple(
+                b for b in (warm.bucket_sizes or BATCH_SIZES)
+                if b <= max(BATCH_SIZES)))
             warm.step()
-            warm.step_batch(max_batch=1)
             cells = {str(b): _bench_cell(compiled, app, b)
                      for b in BATCH_SIZES}
             per_backend[label] = cells
@@ -90,6 +113,11 @@ def serve_batching(rows: list[dict], out_path: str = BENCH_JSON) -> None:
     over = sorted(n for n, pb in apps_payload.items()
                   if pb["numpy"][str(ACCEPT_BATCH)]["speedup"]
                   >= ACCEPT_SPEEDUP)
+    slow = sorted(f"{n}/{label}/batch={b}"
+                  for n, pb in apps_payload.items()
+                  for label, cells in pb.items()
+                  for b, c in cells.items()
+                  if c["speedup"] < MIN_SPEEDUP)
     payload = {
         "meta": {
             "jax_backend": jax_be.name,
@@ -97,11 +125,13 @@ def serve_batching(rows: list[dict], out_path: str = BENCH_JSON) -> None:
             "interpret": jax_be.interpret,
             "batch_sizes": list(BATCH_SIZES),
             "acceptance": f"batch={ACCEPT_BATCH} >= {ACCEPT_SPEEDUP}x "
-                          f"sequential on >= {ACCEPT_MIN_APPS} apps (numpy)",
+                          f"sequential on >= {ACCEPT_MIN_APPS} apps "
+                          f"(numpy); no cell < {MIN_SPEEDUP}x",
             "apps_over_2x_numpy_batch8": over,
-            "note": "validation-size app instances; single timed pass per "
-                    "cell; jax cells may include residual jit compiles for "
-                    "window widths first seen mid-run",
+            "cells_below_floor": slow,
+            "note": "validation-size app instances; best-of-"
+                    f"{REPEATS} warm passes per cell after bucket warmup "
+                    "(steady-state serving throughput)",
         },
         "apps": apps_payload,
     }
@@ -113,3 +143,5 @@ def serve_batching(rows: list[dict], out_path: str = BENCH_JSON) -> None:
     assert len(over) >= ACCEPT_MIN_APPS, \
         (f"acceptance: only {over} reached {ACCEPT_SPEEDUP}x at "
          f"batch={ACCEPT_BATCH} on numpy (need {ACCEPT_MIN_APPS})")
+    assert not slow, \
+        f"serve regression: cells below {MIN_SPEEDUP}x sequential: {slow}"

@@ -66,16 +66,16 @@ from .core.lang import Prog
 from .core.pipeline import (PassManager, PipelineReport, available_passes,
                             register_pass)
 from .core.token_vm import TokenVM
-from .core.vector_vm import VectorVM
+from .core.vector_vm import ReplicatedVectorVM, VectorVM
 from .core.verifier import VerificationError, verify_program
 
 __all__ = [
     "ArraySpec", "BatchExecution", "CacheInfo", "CompiledProgram",
     "Execution", "Lowered", "PassManager", "PipelineReport", "ProgramFn",
-    "RunReport", "Traced", "VerificationError", "available_passes",
-    "cache_info", "clear_cache", "compile", "fuse_dram_images", "lower",
-    "program", "register_pass", "run_fused", "spec", "trace",
-    "verify_program",
+    "RunReport", "ShardSpec", "Traced", "VerificationError",
+    "available_passes", "cache_info", "clear_cache", "compile",
+    "fuse_dram_images", "lower", "program", "register_pass", "run_fused",
+    "spec", "trace", "verify_program",
 ]
 
 # call-time keyword names claimed by the API itself (never scalar params)
@@ -320,12 +320,18 @@ def fuse_dram_images(dfg, inits: Sequence[dict]) -> dict[str, np.ndarray]:
 
 
 def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
+              replicas: int = 1, placement=None,
               **vm_kwargs) -> tuple[Any, float]:
     """Low-level fused launch shared by :meth:`CompiledProgram.execute_batch`
     and the serving engine's raw-``Prog`` shim: build the fused image, scale
     SRAM pools by the batch size (allocation back-pressure stays per-launch,
     so a batch must not starve where B sequential runs would not), run one
-    batched VectorVM. Returns ``(vm, launch_wall_seconds)``."""
+    batched VectorVM. Returns ``(vm, launch_wall_seconds)``.
+
+    ``replicas >= 2`` executes through the placed/replicated VM
+    (:class:`~repro.core.vector_vm.ReplicatedVectorVM`): requests shard
+    across R graph replicas, each contributing one ``VLEN``-lane slice of
+    every window — bit-identical outputs, R× issue width."""
     inits = [arrays for arrays, _scalars in requests]
     params = [{k: int(v) for k, v in scalars.items()}
               for _arrays, scalars in requests]
@@ -333,12 +339,67 @@ def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
     pool_override = dict(vm_kwargs.pop("pool_override", None) or {})
     for pname, pool in result.dfg.pools.items():
         pool_override.setdefault(pname, pool.n_bufs * nreq)
-    vm = VectorVM(result.dfg, fuse_dram_images(result.dfg, inits),
-                  backend=backend, n_requests=nreq,
-                  pool_override=pool_override, **vm_kwargs)
+    fused = fuse_dram_images(result.dfg, inits)
+    if replicas and replicas > 1:
+        vm = ReplicatedVectorVM(result.dfg, fused, backend=backend,
+                                n_requests=nreq, n_replicas=replicas,
+                                placement=placement,
+                                pool_override=pool_override, **vm_kwargs)
+    else:
+        vm = VectorVM(result.dfg, fused, backend=backend, n_requests=nreq,
+                      pool_override=pool_override, **vm_kwargs)
     t0 = time.perf_counter()
     vm.run_batch(params)
     return vm, time.perf_counter() - t0
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """How a *single large request* splits into DRAM-source element ranges
+    for replicated execution (:meth:`CompiledProgram.execute_sharded`).
+
+    ``count`` names the scalar parameter holding the outer element count;
+    ``arrays`` maps each *per-element* DRAM array to its stride (elements
+    per outer index — e.g. ``{"blobs": blob_words, "hashes": 1}``); arrays
+    not listed are broadcast whole to every shard.  ``align`` keeps shard
+    boundaries multiples of a tiling factor (e.g. strlen's ``tile``).
+
+    The caller asserts the outer-parallel contract: iteration ``i`` touches
+    only its own slice of each per-element array (plus read-only shared
+    arrays) — exactly the §VI-B(a) condition under which outer parallelism
+    replicates.  Every program output must be a per-element array (anything
+    else cannot be reassembled from shards)."""
+    count: str
+    arrays: "dict[str, int] | tuple[tuple[str, int], ...]"
+    align: int = 1
+
+    def __post_init__(self):
+        if isinstance(self.arrays, dict):
+            object.__setattr__(self, "arrays",
+                               tuple(sorted(self.arrays.items())))
+
+    def stride(self, name: str) -> Optional[int]:
+        for n, s in self.arrays:
+            if n == name:
+                return s
+        return None
+
+
+def shard_ranges(count: int, shards: int, align: int = 1
+                 ) -> list[tuple[int, int]]:
+    """Split ``[0, count)`` into up to ``shards`` contiguous chunks, each a
+    multiple of ``align`` (except possibly the last).  Fewer chunks come
+    back when ``count`` is too small to feed every shard."""
+    if count <= 0:
+        return [(0, count)]
+    per = -(-count // shards)
+    per = -(-per // align) * align if align > 1 else per
+    out, lo = [], 0
+    while lo < count:
+        hi = min(count, lo + per)
+        out.append((lo, hi))
+        lo = hi
+    return out
 
 
 CacheInfo = collections.namedtuple("CacheInfo", "hits misses currsize")
@@ -413,6 +474,20 @@ class CompiledProgram:
     in_names: tuple[str, ...]
     source_ir: Any = None    # pre-pass language IR (the Golden oracle input)
 
+    @property
+    def placement(self):
+        """The :class:`~repro.core.place.Placement` computed when the
+        pipeline ran the ``place`` stage (``CompileOptions(place=True)`` /
+        ``pipeline="...,place"``); ``None`` otherwise."""
+        return self.result.placement
+
+    def default_replicas(self) -> int:
+        """The replication factor batched execution uses when the caller
+        does not pass ``replicas=``: the placement's §VI-B(a) factor, or 1
+        (the PR 4 fused path) for unplaced programs."""
+        p = self.placement
+        return p.replicas if p is not None else 1
+
     # -- execution ----------------------------------------------------------
     def _check_request(self, arrays: dict[str, np.ndarray],
                        scalars: dict[str, int],
@@ -480,6 +555,7 @@ class CompiledProgram:
     def execute_batch(self, requests: Sequence[tuple[dict, dict]],
                       require_inputs: bool = True,
                       backend: str | ExecutorBackend | None = None,
+                      replicas: int | None = None,
                       **vm_kwargs) -> "BatchExecution":
         """Serve many requests in **one** fused VectorVM launch.
 
@@ -492,16 +568,24 @@ class CompiledProgram:
         requests — then per-request DRAM slices, outputs, and
         lane-attributable stats are de-interleaved back out. Outputs are
         bit-identical to running each request through :meth:`execute`
-        (DESIGN.md §7)."""
+        (DESIGN.md §7).
+
+        ``replicas`` selects the placed/replicated execution path
+        (DESIGN.md §8): ``None`` takes the compiled placement's §VI-B(a)
+        factor (1 when the program was compiled without the ``place``
+        stage); ``R >= 2`` shards the batch across R graph replicas, each
+        contributing one ``VLEN``-lane slice of every window; ``1`` forces
+        the unreplicated PR 4 path."""
         reqs = [(dict(a or {}), dict(s or {})) for a, s in requests]
         if not reqs:
             raise ValueError(f"{self.name}: execute_batch needs at least "
                              "one request")
         for arrays, scalars in reqs:
             self._check_request(arrays, scalars, require_inputs)
+        r = self.default_replicas() if replicas is None else int(replicas)
         vm, wall = run_fused(
             self.result, self.backend if backend is None else backend,
-            reqs, **vm_kwargs)
+            reqs, replicas=r, placement=self.placement, **vm_kwargs)
         executions = []
         for rid in range(len(reqs)):
             dram = vm.request_dram(rid)
@@ -514,6 +598,94 @@ class CompiledProgram:
                 vm, self))
         return BatchExecution(tuple(executions), vm,
                               RunReport.from_vm(vm, "vector", wall))
+
+    def execute_sharded(self, arrays: dict[str, np.ndarray],
+                        scalars: dict[str, int], *, shard: ShardSpec,
+                        replicas: int | None = None,
+                        backend: str | ExecutorBackend | None = None,
+                        **vm_kwargs) -> Execution:
+        """Run one *large* request as R replica shards over DRAM-source
+        element ranges (DESIGN.md §8).
+
+        The outer element range ``[0, count)`` splits into R contiguous
+        chunks (``shard.align``-aligned); shard ``r`` receives chunk ``r``
+        of every per-element array (at offset 0 of a full-size image — the
+        program is shape-specialized), the full contents of every shared
+        array, and ``count = hi - lo``.  All shards run as **one**
+        replicated launch (a shard is a request), and the per-element
+        output slices reassemble into full arrays.  Under the ShardSpec's
+        outer-parallel contract the result is bit-identical to
+        :meth:`execute` on the whole request.
+
+        The returned :class:`Execution`'s ``dram`` holds the merged
+        per-element *output* arrays plus the input arrays exactly as
+        passed (inputs are read-only shared state under the contract; a
+        program that writes a non-output DRAM array is rejected — R shard
+        copies of such an array cannot be merged back into one image)."""
+        self._check_request(arrays, scalars, require_inputs=True)
+        if shard.count not in scalars:
+            raise TypeError(f"{self.name}: shard count parameter "
+                            f"{shard.count!r} is not a scalar param")
+        out_names = {n for n, _sz, _dt in self.out_info}
+        unmergeable = [n for n in out_names if shard.stride(n) is None]
+        if unmergeable:
+            raise ValueError(
+                f"{self.name}: output array(s) {sorted(unmergeable)} are "
+                "not in ShardSpec.arrays — shards cannot be reassembled")
+        # every *observable* DRAM array the program writes must be a
+        # (per-element) output: a non-output array would end up with R
+        # divergent shard copies that cannot be merged back into one
+        # image, silently breaking the "bit-identical to execute()"
+        # contract.  "__"-prefixed arrays are compiler-internal scratch
+        # (e.g. ReadIt fetch staging) — reserved names, excluded from
+        # observable state everywhere (see tests/test_dataflow.run_both)
+        written = {op.space for c in self.result.dfg.contexts.values()
+                   for op in c.body
+                   if op.op in ("dram_store", "atomic_add")}
+        unshardable = {n for n in written - out_names
+                       if not n.startswith("__")}
+        if unshardable:
+            raise ValueError(
+                f"{self.name}: program writes non-output DRAM array(s) "
+                f"{sorted(unshardable)}; sharded execution cannot merge "
+                "them — declare them as outputs or use execute()")
+        unknown = [n for n, _s in shard.arrays
+                   if n not in self.in_specs and n not in out_names]
+        if unknown:
+            raise KeyError(f"{self.name}: ShardSpec names unknown "
+                           f"array(s) {sorted(unknown)}")
+        count = int(scalars[shard.count])
+        want = self.default_replicas() if replicas is None else int(replicas)
+        ranges = shard_ranges(count, max(want, 1), shard.align)
+        reqs = []
+        for lo, hi in ranges:
+            sh_arrays = {}
+            for n, a in arrays.items():
+                stride = shard.stride(n)
+                if stride is None:
+                    sh_arrays[n] = a
+                else:
+                    full = np.zeros(self.in_specs[n].size,
+                                    np.asarray(a).dtype)
+                    chunk = np.asarray(a).ravel()[lo * stride: hi * stride]
+                    full[: chunk.size] = chunk
+                    sh_arrays[n] = full
+            reqs.append((sh_arrays, {**scalars, shard.count: hi - lo}))
+        bx = self.execute_batch(reqs, backend=backend,
+                                replicas=len(ranges), **vm_kwargs)
+        # reassemble per-element outputs from the shards' leading slices
+        merged: dict[str, np.ndarray] = {}
+        for n, sz, _dt in self.out_info:
+            stride = shard.stride(n)
+            out = np.zeros(sz, np.int64)
+            for (lo, hi), ex in zip(ranges, bx):
+                chunk = np.asarray(ex.dram[n])[: (hi - lo) * stride]
+                out[lo * stride: hi * stride] = chunk
+            merged[n] = out
+        dram = {n: np.asarray(a).ravel().copy() for n, a in arrays.items()}
+        dram.update(merged)
+        outputs = tuple(merged[n].copy() for n, _sz, _dt in self.out_info)
+        return Execution(outputs, dram, bx.report, bx.vm, self)
 
     def _bind_arrays(self, args, kwargs):
         arrays, scalars, _ = _bind_call(
@@ -656,12 +828,16 @@ class ProgramFn:
     def _make_key(self, in_specs, out_info, statics, options, backend):
         # the pipeline *spec* — not the CompileOptions flag tuple — keys the
         # compile: boolean sugar and an explicit pipeline= that denote the
-        # same pass sequence share one entry; a custom pipeline misses
+        # same pass sequence share one entry; a custom pipeline misses.
+        # when the spec contains the "place" stage, the machine parameters
+        # + utilization target join the key (the Placement rides on the
+        # CompiledProgram, so different machines must not share an entry)
         return (tuple((n, s.shape, s.dtype)
                       for n, s in sorted(in_specs.items())),
                 out_info,
                 tuple(sorted(statics.items())),
                 options.pipeline_spec(),
+                options.placement_token(),
                 _backend_token(backend, options))
 
     # -- tracing -------------------------------------------------------------

@@ -48,6 +48,10 @@ class CompileOptions:
     pipeline: str | None = None      # explicit pipeline spec (overrides the
                                      # booleans; see pipeline_spec())
     verify_each: bool = False        # structural verifier after every pass
+    place: bool = False              # run the placement stage (core/place.py)
+    machine: "object | None" = None  # MachineParams for placement (default
+                                     # Table II values when None)
+    place_target: float = 0.7        # §VI-B(a) utilization target
 
     def pipeline_spec(self) -> str:
         """The pipeline this option set denotes — an explicit ``pipeline``
@@ -66,7 +70,27 @@ class CompileOptions:
             names.append("hoist-allocators")
         if self.subword_packing:
             names.append("infer-widths")
+        if self.place:
+            names.append("place")
         return ",".join(names)
+
+    def wants_place(self) -> bool:
+        """Whether this compile runs the placement stage — true when the
+        synthesized or explicit pipeline contains the ``place`` marker."""
+        return "place" in self.pipeline_spec().split(",")
+
+    def machine_params(self):
+        """The MachineParams placement maps onto (Table II when unset)."""
+        from .machine import MachineParams
+        return self.machine if self.machine is not None else MachineParams()
+
+    def placement_token(self) -> tuple | None:
+        """Compile-cache key contribution of the placement stage: ``None``
+        when placement is off; otherwise the machine identity + target —
+        same parameters hit, different parameters miss."""
+        if not self.wants_place():
+            return None
+        return ("place", self.machine_params().token(), self.place_target)
 
     def pass_manager(self, **pm_kwargs) -> PassManager:
         pm_kwargs.setdefault("verify_each", self.verify_each)
@@ -80,6 +104,8 @@ class CompileResult:
     widths: dict[str, int]
     options: CompileOptions
     report: PipelineReport | None = None    # per-pass instrumentation
+    placement: "object | None" = None       # core/place.py Placement, when
+                                            # the pipeline ran the stage
 
     def as_text(self) -> str:
         """Round-trip-stable textual form of the post-pass IR."""
@@ -122,4 +148,12 @@ def compile_program(prog, opts: CompileOptions | None = None, *,
     dfg = lowering.lower(lowered_ir)
     if opts.verify_each:
         verify_dfg(dfg)
-    return CompileResult(dfg, lowered_ir, report.widths, opts, report)
+    placement = None
+    if opts.wants_place():
+        # the "place" registry entry is an IR marker; the stage itself runs
+        # here, on the lowered DFG (see core/place.py)
+        from .place import place_graph
+        placement = place_graph(dfg, report.widths, opts.machine_params(),
+                                target=opts.place_target)
+    return CompileResult(dfg, lowered_ir, report.widths, opts, report,
+                         placement)

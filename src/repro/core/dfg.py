@@ -226,6 +226,39 @@ class DFG:
                         f"ctx {c.name}: output arity {len(o.values)} != "
                         f"link {link.id} arity {link.nvars}")
 
+    def context_depths(self) -> dict[int, int]:
+        """Longest acyclic path length (in contexts) from the entry;
+        loop-header backedges ignored.  Shared by the machine model's
+        retiming estimates (``machine.map_graph``) and the placement
+        stage's section ordering (``place.place_graph``)."""
+        depth: dict[int, int] = {}
+        order = list(self.contexts)
+        for _ in range(len(order)):
+            changed = False
+            for cid in order:
+                c = self.contexts[cid]
+                d = 0
+                for lid in head_links(c.head):
+                    src = self.links[lid].src
+                    if src is None:
+                        continue
+                    if isinstance(c.head, FwdBwdMergeHead) and \
+                            lid == c.head.back:
+                        continue   # ignore the backedge
+                    d = max(d, depth.get(src, 0) + 1)
+                if depth.get(cid) != d:
+                    depth[cid] = d
+                    changed = True
+            if not changed:
+                break
+        return depth
+
+    def topo_order(self) -> list[int]:
+        """Context ids sorted by acyclic depth (ties broken by id) — the
+        dataflow-forward order placement packs sections in."""
+        depth = self.context_depths()
+        return sorted(self.contexts, key=lambda cid: (depth.get(cid, 0), cid))
+
     def stats(self) -> dict:
         return {
             "contexts": len(self.contexts),

@@ -23,7 +23,7 @@ it produces the Table IV-style resource report and the Fig. 12 ablations.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 
 from .dfg import (DFG, Context, CounterHead, ForwardMergeHead,
                   FwdBwdMergeHead, SingleHead, SourceHead, ZipHead,
@@ -34,7 +34,7 @@ _DRAM_OPS = {"dram_load", "dram_store"}
 _FREE_OPS = {"mov"}          # register renames are absorbed into routing
 
 
-@dataclass
+@dataclass(frozen=True)
 class MachineParams:
     """Table II."""
     n_cu: int = 200
@@ -52,16 +52,29 @@ class MachineParams:
     dram_gbps: float = 900.0
     freq_ghz: float = 1.6
 
+    def token(self) -> tuple:
+        """Hashable identity — keys the front-end compile cache when a
+        placement stage is in the pipeline (see ``api._make_key``)."""
+        return tuple(getattr(self, f.name) for f in fields(self))
+
 
 @dataclass
 class ContextMap:
+    """Per-context resource accounting.  ``mu_deadlock``/``mu_retime`` and
+    ``pools`` attribute the graph-level MU totals back to the contexts that
+    cause them, so the placement stage (``core/place.py``) can pack contexts
+    into resource-bounded sections without re-deriving the analysis."""
     name: str
+    ctx_id: int = -1
     cu: int = 0
     mu: int = 0
     ag: int = 0
     stages_used: int = 0
     vec_buf: int = 0
     scal_buf: int = 0
+    mu_deadlock: int = 0
+    mu_retime: int = 0
+    pools: tuple[str, ...] = ()
 
 
 @dataclass
@@ -119,7 +132,9 @@ def map_graph(g: DFG, widths: dict[str, int] | None = None,
 
     # ---- per-context splitting (§V-D(b))
     for c in g.contexts.values():
-        cm = ContextMap(c.name)
+        cm = ContextMap(c.name, ctx_id=c.id)
+        cm.pools = tuple(sorted({op.space for op in c.body
+                                 if op.op in _MEM_OPS and op.space}))
         compute_ops = [op for op in c.body
                        if op.op not in _MEM_OPS | _DRAM_OPS | _FREE_OPS]
         sram_ops = [op for op in c.body if op.op in _MEM_OPS]
@@ -161,48 +176,26 @@ def map_graph(g: DFG, widths: dict[str, int] | None = None,
         pool_bytes = pool.n_bufs * pool.buf_words * 4
         rep.mu_sram += max(1, math.ceil(pool_bytes / params.mu_bytes))
 
-    # ---- deadlock-avoidance buffers: one per cyclic region backedge
+    # ---- deadlock-avoidance + retiming MU, attributed per context so the
+    # placement stage can pack them into sections (§V-D(b))
+    by_ctx = {cm.ctx_id: cm for cm in rep.per_context}
+    depth = g.context_depths()
     for c in g.contexts.values():
+        cm = by_ctx[c.id]
         if isinstance(c.head, FwdBwdMergeHead):
+            cm.mu_deadlock += 1
             rep.mu_deadlock += 1
-
-    # ---- retiming: path-length imbalance at merge joins (§V-D(b))
-    depth = _context_depths(g)
-    for c in g.contexts.values():
         if isinstance(c.head, (ForwardMergeHead, ZipHead)):
             lids = head_links(c.head)
             srcs = [g.links[l].src for l in lids if g.links[l].src is not None]
             if len(srcs) >= 2:
                 ds = [depth.get(s, 0) for s in srcs]
                 imbalance = max(ds) - min(ds)
-                rep.mu_retime += math.ceil(imbalance / 4)
+                retime = math.ceil(imbalance / 4)
+                cm.mu_retime += retime
+                rep.mu_retime += retime
+        cm.mu = cm.mu_deadlock + cm.mu_retime
     return rep
-
-
-def _context_depths(g: DFG) -> dict[int, int]:
-    """Longest acyclic path length (in contexts) from the entry; backedges
-    ignored. Used for retiming estimates."""
-    depth: dict[int, int] = {}
-    order = list(g.contexts)
-    for _ in range(len(order)):
-        changed = False
-        for cid in order:
-            c = g.contexts[cid]
-            d = 0
-            for lid in head_links(c.head):
-                src = g.links[lid].src
-                if src is None:
-                    continue
-                if isinstance(c.head, FwdBwdMergeHead) and \
-                        lid == c.head.back:
-                    continue   # ignore the backedge
-                d = max(d, depth.get(src, 0) + 1)
-            if depth.get(cid) != d:
-                depth[cid] = d
-                changed = True
-        if not changed:
-            break
-    return depth
 
 
 def scale_outer_parallelism(rep: MappingReport, params: MachineParams | None

@@ -374,3 +374,7 @@ def _infer_widths(prog: ir.Program, ctx: PassContext) -> ir.Program:
 # the in-tree plugin example: an optimization pass registered through the
 # exact same decorator user code reaches via ``revet.register_pass``
 from . import constfold as _constfold  # noqa: E402,F401  (registers itself)
+
+# the placement stage's marker pass ("place") — the actual placement runs
+# post-lowering in the compiler driver; see core/place.py
+from . import place as _place  # noqa: E402,F401  (registers itself)

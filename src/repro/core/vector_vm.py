@@ -410,6 +410,17 @@ class VectorVM:
         return old
 
     # ------------------------------------------------------------------- tail
+    # the two payload-assembly seams _route_window dispatches through —
+    # the replicated executor overrides them with column-fill forms (same
+    # values, fewer temporaries); everything else about routing is shared
+    def _payload(self, regs: dict[str, np.ndarray], values, n: int,
+                 rid: np.ndarray) -> np.ndarray:
+        return np.stack([regs[v] for v in values] + [rid], axis=1)
+
+    def _barrier_payload(self, n: int, nvars: int,
+                         rid: np.ndarray) -> np.ndarray:
+        return np.stack([np.zeros(n, _I64)] * (nvars - 1) + [rid], axis=1)
+
     def _route_window(self, ctx: Context, kinds: np.ndarray,
                       regs: dict[str, np.ndarray],
                       barrier_delta_map=None) -> None:
@@ -443,12 +454,10 @@ class VectorVM:
                 # the request-id column rides every payload so compaction
                 # and barrier lowering keep lane->request attribution
                 # aligned (it is all-zero on single-request launches)
-                payload = np.stack([regs[v] for v in o.values] + [rid],
-                                   axis=1)
+                payload = self._payload(regs, o.values, n, rid)
             elif self.n_requests > 1:
                 # barrier-only / valueless windows still carry rid stamps
-                payload = np.stack(
-                    [np.zeros(n, _I64)] * (q.nvars - 1) + [rid], axis=1)
+                payload = self._barrier_payload(n, q.nvars, rid)
             else:
                 payload = None    # single-request fast path: zeros suffice
             out_kinds = kinds
@@ -968,6 +977,246 @@ def _empty_regs(vars, rid: int = 0) -> dict[str, np.ndarray]:
     regs = {v: np.zeros(1, _I64) for v in vars}
     regs[RID] = np.full(1, rid, _I64)
     return regs
+
+
+# ---------------------------------------------------------------------------
+# Replicated execution (core/place.py drives this)
+# ---------------------------------------------------------------------------
+
+class ReplicatedVectorVM(VectorVM):
+    """Execute a *placed* program with R data-parallel graph replicas.
+
+    The placement stage (``core/place.py``) computes the §VI-B(a) outer
+    replication factor R: the spatial fabric holds R copies of the graph,
+    each contributing ``VLEN`` lanes per firing — the lane-replication
+    execution model Capstan's vector RDA assumes.  This executor models
+    exactly that: every window is up to ``R * VLEN`` lanes wide (lane slice
+    ``[r*VLEN, (r+1)*VLEN)`` standing for replica ``r``'s copy of the
+    context), and batched requests shard across replicas round-robin by
+    request id (``replica_of``).  Because the base VM's windows already
+    interleave requests freely and every program admitted to batching is
+    schedule-independent, widening the windows is *semantics-preserving*:
+    outputs and per-request :data:`LANE_STATS` are bit-identical to the
+    unreplicated fused path (asserted in ``tests/test_place.py`` and per
+    cell in ``benchmarks/place_bench.py``).
+
+    On top of the wider windows the replicated scheduler vectorizes the two
+    head protocols whose one-token-at-a-time processing cannot fill R·VLEN
+    lanes (the base :class:`VectorVM` keeps the simple per-token forms — it
+    is the TokenVM-validated oracle this executor is verified against):
+
+    * **counter heads** drain many input rows per firing, assembling each
+      row's expansion *and* its group-close barrier into one window
+      (contexts with allocations keep the base path — allocation
+      back-pressure must stall *between* expansions);
+    * **merge heads** consume runs of equal barrier pairs in one step
+      instead of one pair per probe (with B requests the barrier streams
+      arrive B-deep);
+    * window payloads are assembled by column fill (:meth:`_payload`)
+      rather than ``np.stack`` — the same values, fewer temporaries.
+
+    Per-replica accounting: :meth:`replica_stats` aggregates
+    :data:`LANE_STATS` over the replica's requests; :meth:`replica_cycles`
+    is the replica's share of the busiest context's issue slots.  The
+    whole-launch cost model (:meth:`estimated_cycles`) divides by the lanes
+    a window actually spans, so R replicas genuinely model R× issue width.
+    """
+
+    def __init__(self, g: DFG, dram_init: dict[str, np.ndarray] | None = None,
+                 n_replicas: int | None = None, placement=None, **kw):
+        if n_replicas is None:
+            n_replicas = placement.replicas if placement is not None else 1
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        kw.setdefault("vlen", n_replicas * VLEN)
+        super().__init__(g, dram_init, **kw)
+        self.n_replicas = int(n_replicas)
+        self.placement = placement
+        self._ctx_has_alloc = {c.id: any(op.op == "alloc" for op in c.body)
+                               for c in g.contexts.values()}
+
+    # -------------------------------------------------------- replica views
+    def replica_of(self, rid: int) -> int:
+        """Which replica serves request ``rid`` (round-robin sharding —
+        batch-invariant, so growing the batch never re-shards a request)."""
+        self._check_rid(rid)
+        return rid % self.n_replicas
+
+    def replica_requests(self, replica: int) -> list[int]:
+        if not 0 <= replica < self.n_replicas:
+            raise IndexError(f"replica {replica} out of range "
+                             f"[0, {self.n_replicas})")
+        return list(range(replica, self.n_requests, self.n_replicas))
+
+    def replica_stats(self, replica: int) -> collections.Counter:
+        """Aggregate :data:`LANE_STATS` over the replica's requests."""
+        out: collections.Counter = collections.Counter()
+        for rid in self.replica_requests(replica):
+            out.update(self.request_stats(rid))
+        return out
+
+    def replica_cycles(self, replica: int) -> int:
+        """Issue slots the replica's lanes occupy on its busiest context."""
+        rids = self.replica_requests(replica)
+        if not rids:
+            return 0
+        if self.n_requests == 1:
+            return self.estimated_cycles()
+        return max(
+            (-(-int(sum(arr[r] for r in rids)) // MACHINE_LANES)
+             for arr in self._rid_ctx_lanes.values()), default=0)
+
+    # ---------------------------------------------------------- fast payload
+    def _payload(self, regs: dict[str, np.ndarray], values, n: int,
+                 rid: np.ndarray) -> np.ndarray:
+        out = np.empty((n, len(values) + 1), _I64)
+        for i, v in enumerate(values):
+            out[:, i] = regs[v]
+        out[:, -1] = rid
+        return out
+
+    def _barrier_payload(self, n: int, nvars: int,
+                         rid: np.ndarray) -> np.ndarray:
+        out = np.zeros((n, nvars), _I64)
+        out[:, -1] = rid
+        return out
+
+    # ------------------------------------------------- vectorized counters
+    def _fire_counter(self, ctx, h: CounterHead, room) -> bool:
+        """Drain many counter inputs per firing: each data row's expansion,
+        its group-close barrier, and any pass-through barriers assemble into
+        one window, in exactly the base path's emission order — one
+        ``R*VLEN``-wide firing instead of one window per input row."""
+        if self._ctx_has_alloc[ctx.id]:
+            return super()._fire_counter(ctx, h, room)
+        st = self._cs[ctx.id]
+        q = self.queues[h.link]
+        vars_in = self.g.links[h.link].vars
+        ncols = len(vars_in)
+        budget = min(self.vlen, room)
+        kparts: list[np.ndarray] = []
+        pparts: list[np.ndarray] = []
+        iparts: list[np.ndarray] = []
+        total = 0
+        consumed = False
+        while total < budget:
+            if st.active:
+                remaining = max(0, -(-(st.hi - st.cur) // st.step)) \
+                    if st.step > 0 else 0
+                emit = min(remaining, budget - total)
+                if emit > 0:
+                    idx = st.cur + st.step * np.arange(emit, dtype=_I64)
+                    kparts.append(np.zeros(emit, _I64))
+                    pparts.append(np.broadcast_to(st.base, (emit, ncols + 1)))
+                    iparts.append(idx)
+                    st.cur += st.step * emit
+                    total += emit
+                if st.cur >= st.hi or st.step <= 0:
+                    st.active = False
+                    if h.add_level:
+                        row = np.zeros((1, ncols + 1), _I64)
+                        row[0, -1] = st.base[-1]
+                        kparts.append(np.ones(1, _I64))
+                        pparts.append(row)
+                        iparts.append(np.zeros(1, _I64))
+                        total += 1
+                    continue
+                break                 # budget exhausted mid-expansion
+            k, v = q.peek(1)
+            if len(k) == 0:
+                break
+            if k[0] == 0:
+                row = v[0]
+                named = dict(zip(vars_in, row))
+                st.base = row.copy()
+                st.cur = int(named[h.lo])
+                st.hi = int(named[h.hi])
+                st.step = int(named[h.step]) or 1
+                st.active = True
+                q.pop(1)
+                consumed = True
+            else:
+                lvl = int(k[0]) + (1 if h.add_level else 0)
+                row = np.zeros((1, ncols + 1), _I64)
+                row[0, -1] = v[0, -1]
+                kparts.append(np.full(1, lvl, _I64))
+                pparts.append(row)
+                iparts.append(np.zeros(1, _I64))
+                q.pop(1)
+                total += 1
+        if not kparts:
+            return consumed
+        kinds = np.concatenate(kparts)
+        payload = np.concatenate([np.asarray(p) for p in pparts], axis=0)
+        regs = {v: payload[:, i].copy() for i, v in enumerate(vars_in)}
+        regs[h.ivar] = np.concatenate(iparts)
+        regs[RID] = payload[:, -1].copy()
+        assert self._exec_body(ctx, kinds, regs)
+        self._route_window(ctx, kinds, regs)
+        return True
+
+    # ------------------------------------------------- batched merge pairs
+    def _fire_merge(self, ctx, h: ForwardMergeHead, room) -> bool:
+        """Base merge protocol, but runs of *equal barrier pairs* are
+        consumed in one step (a B-request batch stacks B group barriers
+        back to back on both inputs).  Allocating merge contexts keep the
+        base ``VLEN`` window cap: the merge path *raises* on an alloc
+        stall ("size the pool above the merge fan-in"), so widening the
+        window to R*VLEN would raise the pool-size contract by R for a
+        program that completes unreplicated."""
+        qa, qb = self.queues[h.a], self.queues[h.b]
+        vars_a = self.g.links[h.a].vars
+        budget = min(VLEN if self._ctx_has_alloc[ctx.id] else self.vlen,
+                     room)
+        out_kinds: list[np.ndarray] = []
+        out_vals: list[np.ndarray] = []
+        emitted = 0
+        while emitted < budget:
+            ka, va = qa.peek(budget - emitted)
+            kb, vb = qb.peek(budget - emitted)
+            ra = self.backend.data_run(ka)
+            rb = self.backend.data_run(kb)
+            if ra:
+                out_kinds.append(ka[:ra].copy())
+                out_vals.append(va[:ra].copy())
+                qa.pop(ra)
+                emitted += ra
+                continue
+            if rb:
+                out_kinds.append(kb[:rb].copy())
+                out_vals.append(vb[:rb].copy())
+                qb.pop(rb)
+                emitted += rb
+                continue
+            if len(ka) and len(kb):
+                m = min(len(ka), len(kb))
+                pair = (ka[:m] > 0) & (ka[:m] == kb[:m])
+                stop = np.nonzero(~pair)[0]
+                nb = int(stop[0]) if len(stop) else m
+                if nb == 0:
+                    raise VectorDeadlock(
+                        f"merge barrier mismatch in {ctx.name}")
+                rows = np.zeros((nb, len(vars_a) + 1), _I64)
+                rows[:, -1] = va[:nb, -1]   # barriers keep their request id
+                out_kinds.append(ka[:nb].copy())
+                out_vals.append(rows)
+                qa.pop(nb)
+                qb.pop(nb)
+                emitted += nb
+                continue
+            break
+        if emitted == 0:
+            return False
+        kinds = np.concatenate(out_kinds)
+        vals = np.concatenate(out_vals)
+        regs = {v: vals[:, i].copy() for i, v in enumerate(vars_a)}
+        regs[RID] = vals[:, -1].copy()
+        if self._alloc_limit(ctx, kinds) < len(kinds):
+            raise VectorDeadlock(f"alloc stall inside merge {ctx.name}; "
+                                 "size the pool above the merge fan-in")
+        assert self._exec_body(ctx, kinds, regs)
+        self._route_window(ctx, kinds, regs)
+        return True
 
 
 # ---------------------------------------------------------------------------

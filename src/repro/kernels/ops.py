@@ -109,6 +109,8 @@ def segment_reduce(kinds, vals, init: float = 0.0, op: str = "add",
 # XLA path used where interpret-mode Pallas is impractically slow — the same
 # fallback policy the LM-stack wrappers in this file already follow.
 
+from ..core.vector_vm import VLEN as _VM_LANE  # one replica's lane slice
+
 _VM_PAD_MIN = 8
 _INT32_MIN = -(1 << 31)
 _I64 = np.int64
@@ -118,6 +120,28 @@ def _vm_pad_len(n: int) -> int:
     """Round window length up to a power of two: windows are <= VLEN but of
     arbitrary length, and padding bounds the number of XLA compilations."""
     return max(_VM_PAD_MIN, 1 << max(n - 1, 0).bit_length())
+
+
+def _vm_ew_shape(n: int) -> tuple[int, ...]:
+    """Dispatch shape for an ``n``-lane element-wise window.
+
+    Windows up to one lane slice keep the historical power-of-two 1-D
+    padding.  Wider windows — the placed/replicated executor fuses up to
+    ``R * VLEN`` lanes per firing (DESIGN.md §8) — dispatch as a
+    ``[rows, 128]`` batch: the leading axis is the replica-lane-major row,
+    the minor axis the TPU lane tile, so wide-window compilation stays
+    bounded by R extra shapes (``rows`` in 2..R, 128-granular instead of
+    power-of-two) and the array layout matches the VPU's native
+    (sublane, lane) tiling."""
+    if n <= _VM_LANE:
+        return (_vm_pad_len(n),)
+    return (-(-n // _VM_LANE), _VM_LANE)
+
+
+def _vm_ew_pad(a, n: int, shape: tuple[int, ...]) -> np.ndarray:
+    out = np.zeros(shape, np.int32)
+    out.reshape(-1)[:n] = np.asarray(a)[:n]
+    return out
 
 
 def _vm_wrap32(a):
@@ -212,22 +236,22 @@ def _vm_i32_pad(a, n: int, m: int, fill: int = 0) -> np.ndarray:
 
 def vm_binop(op: str, a, b) -> np.ndarray:
     n = len(a)
-    m = _vm_pad_len(n)
-    out = _vm_ew(op)(_vm_i32_pad(a, n, m), _vm_i32_pad(b, n, m))
-    return np.asarray(out, np.int32)[:n].astype(_I64)
+    shape = _vm_ew_shape(n)
+    out = _vm_ew(op)(_vm_ew_pad(a, n, shape), _vm_ew_pad(b, n, shape))
+    return np.asarray(out, np.int32).reshape(-1)[:n].astype(_I64)
 
 
 def vm_unop(op: str, a) -> np.ndarray:
     n = len(a)
-    m = _vm_pad_len(n)
-    ai = _vm_i32_pad(a, n, m)
+    shape = _vm_ew_shape(n)
+    ai = _vm_ew_pad(a, n, shape)
     if op == "neg":
-        out = _vm_ew("sub")(np.zeros(m, np.int32), ai)
+        out = _vm_ew("sub")(np.zeros(shape, np.int32), ai)
     elif op == "not":
-        out = _vm_ew("eq")(ai, np.zeros(m, np.int32))
+        out = _vm_ew("eq")(ai, np.zeros(shape, np.int32))
     else:
         raise NotImplementedError(op)
-    return np.asarray(out, np.int32)[:n].astype(_I64)
+    return np.asarray(out, np.int32).reshape(-1)[:n].astype(_I64)
 
 
 @jax.jit
@@ -237,10 +261,10 @@ def _jnp_select(c, a, b):
 
 def vm_select(c, a, b) -> np.ndarray:
     n = len(c)
-    m = _vm_pad_len(n)
-    out = _jnp_select(_vm_i32_pad(c, n, m), _vm_i32_pad(a, n, m),
-                      _vm_i32_pad(b, n, m))
-    return np.asarray(out, np.int32)[:n].astype(_I64)
+    shape = _vm_ew_shape(n)
+    out = _jnp_select(_vm_ew_pad(c, n, shape), _vm_ew_pad(a, n, shape),
+                      _vm_ew_pad(b, n, shape))
+    return np.asarray(out, np.int32).reshape(-1)[:n].astype(_I64)
 
 
 # ---- window compaction (filter / discard / barrier lowering) ----

@@ -70,12 +70,28 @@ class DataflowEngine:
     compilation happens here, and the backend instance rides along) or a
     ``lang.Prog``/``ir.Program`` (legacy shim — compiled once with ``opts``).
     ``backend`` overrides the compiled/``opts`` backend when given.
+
+    ``replicas`` sets the replication factor fused launches shard across
+    (``None`` follows the compiled placement — see DESIGN.md §8; ``1``
+    forces the unreplicated fused path).
+
+    ``bucket_sizes`` pads each fused launch up to a small fixed set of
+    ``n_requests`` sizes so a jit-compiling backend sees a *bounded* set of
+    launch shapes instead of one per queue length: ``"auto"`` uses powers
+    of two on jax backends and no padding on numpy (which has no compile
+    cache to thrash); an explicit tuple pins the buckets; ``None`` disables
+    padding.  Pad slots replay the batch's last request and their responses
+    are dropped — the padding *work* is real (and lands in ``agg``), the
+    recompiles it prevents cost more (the BENCH_serve hash_table jax
+    batch=4 regression was exactly this).
     """
 
     def __init__(self, prog: Union[CompiledProgram, object],
                  opts: CompileOptions | None = None,
                  backend: str | ExecutorBackend | None = None,
-                 queue_cap: int = 1 << 16):
+                 queue_cap: int = 1 << 16,
+                 replicas: int | None = None,
+                 bucket_sizes: "str | tuple[int, ...] | None" = "auto"):
         if isinstance(prog, CompiledProgram):
             if opts is not None:
                 raise TypeError(
@@ -91,10 +107,44 @@ class DataflowEngine:
             self.result = compile_program(prog, opts)
             self.backend = make_backend(
                 backend if backend is not None else self.result.options.backend)
+        self.replicas = replicas
+        if bucket_sizes == "auto":
+            bucket_sizes = ((1, 2, 4, 8, 16, 32, 64)
+                            if self.backend.name.startswith("jax") else None)
+        self.bucket_sizes = tuple(sorted(bucket_sizes)) if bucket_sizes \
+            else None
         self.queue_cap = queue_cap
         self.queue: collections.deque[DataflowRequest] = collections.deque()
         self.done: list[DataflowResponse] = []
         self.agg: collections.Counter = collections.Counter()
+
+    def _effective_replicas(self) -> int | None:
+        if self.replicas is not None:
+            return self.replicas
+        if self.compiled is not None:
+            return None          # execute_batch follows the placement
+        placement = getattr(self.result, "placement", None)
+        return placement.replicas if placement is not None else 1
+
+    def _bucket(self, n: int) -> int:
+        """Launch size for an ``n``-request batch: the smallest configured
+        bucket >= n (n itself beyond the largest bucket)."""
+        if self.bucket_sizes:
+            for b in self.bucket_sizes:
+                if b >= n:
+                    return b
+        return n
+
+    def _launch(self, reqs: list[tuple], replicas: int | None):
+        """The one fused-launch path (compiled or raw-``Prog`` shim) —
+        shared by :meth:`step_batch` and :meth:`warmup` so warmup always
+        pre-compiles exactly the code path serving will take."""
+        if self.compiled is not None:
+            return self.compiled.execute_batch(
+                reqs, require_inputs=False, backend=self.backend,
+                replicas=replicas, queue_cap=self.queue_cap)
+        return run_fused(self.result, self.backend, reqs,
+                         replicas=replicas or 1, queue_cap=self.queue_cap)
 
     def submit(self, req: DataflowRequest) -> None:
         self.queue.append(req)
@@ -137,28 +187,53 @@ class DataflowEngine:
         if not batch:
             return []
         reqs = [(dict(r.dram_init or {}), r.params) for r in batch]
+        # bucket padding: replay the last request into the pad slots so the
+        # backend sees one of a bounded set of launch shapes; pad responses
+        # are dropped below
+        n_real = len(reqs)
+        reqs = reqs + [reqs[-1]] * (self._bucket(n_real) - n_real)
+        out = self._launch(reqs, self._effective_replicas())
         if self.compiled is not None:
-            bx = self.compiled.execute_batch(
-                reqs, require_inputs=False, backend=self.backend,
-                queue_cap=self.queue_cap)
+            bx = out
             responses = [DataflowResponse(req.rid, ex.dram, ex.report)
                          for req, ex in zip(batch, bx)]
             launch_stats = bx.report.stats
         else:
             # raw-Prog shim: same fused launch, one layer lower
-            vm, wall = run_fused(self.result, self.backend, reqs,
-                                 queue_cap=self.queue_cap)
+            vm, wall = out
             responses = [
                 DataflowResponse(req.rid, vm.request_dram(rid),
                                  RunReport.for_request(vm, rid, wall))
                 for rid, req in enumerate(batch)]
             launch_stats = vm.stats
-        # aggregate the *launch* stats once (lane counters equal the sum of
-        # the per-request views, and scheduling counters — ticks, link
-        # tokens — stay comparable with sequential step() aggregation)
+        # aggregate the *launch* stats once — on a padded launch this
+        # includes the pad slots' replayed work, so agg records work done,
+        # not just work returned (it exceeds the sum over the responses)
         self.agg.update(launch_stats)
         self.done.extend(responses)
         return responses
+
+    def warmup(self, request: DataflowRequest | None = None,
+               buckets: "tuple[int, ...] | None" = None) -> list[int]:
+        """Pre-compile every launch shape a serving deployment will see.
+
+        Replays ``request`` (or the queue's head, without consuming it) at
+        each configured bucket size — after this, steady-state
+        ``step_batch`` launches hit only warm jit caches regardless of
+        queue length.  Responses are discarded and nothing lands in
+        ``done``/``agg``.  Returns the bucket sizes warmed (empty when no
+        buckets are configured and ``buckets`` is not given)."""
+        if request is None:
+            if not self.queue:
+                raise ValueError("warmup: no request given and queue empty")
+            request = self.queue[0]
+        sizes = tuple(buckets) if buckets is not None \
+            else (self.bucket_sizes or ())
+        replicas = self._effective_replicas()
+        for b in sizes:
+            self._launch([(dict(request.dram_init or {}),
+                           request.params)] * b, replicas)
+        return list(sizes)
 
     def drain(self, max_batch: int = 1) -> list[DataflowResponse]:
         """Serve until the queue is empty — one request at a time by

@@ -8,19 +8,24 @@ language/compiler names a program author needs.
 """
 from repro.api import (ArraySpec, BatchExecution, CacheInfo, CompiledProgram,
                        Execution, Lowered, PassManager, PipelineReport,
-                       ProgramFn, RunReport, Traced, VerificationError,
-                       available_passes, cache_info, clear_cache, compile,
-                       fuse_dram_images, lower, program, register_pass,
-                       run_fused, spec, trace, verify_program)
+                       ProgramFn, RunReport, ShardSpec, Traced,
+                       VerificationError, available_passes, cache_info,
+                       clear_cache, compile, fuse_dram_images, lower,
+                       program, register_pass, run_fused, spec, trace,
+                       verify_program)
 from repro.core.compiler import DEFAULT_PIPELINE, CompileOptions
 from repro.core.lang import Block, E, Prog, c, select
+from repro.core.machine import MachineParams
+from repro.core.place import Placement, PlacementError, Section, place_graph
+from repro.core.vector_vm import ReplicatedVectorVM
 
 __all__ = [
     "ArraySpec", "BatchExecution", "Block", "CacheInfo", "CompileOptions",
     "CompiledProgram", "DEFAULT_PIPELINE", "E", "Execution", "Lowered",
-    "PassManager", "PipelineReport", "Prog", "ProgramFn", "RunReport",
-    "Traced", "VerificationError", "available_passes", "c", "cache_info",
-    "clear_cache", "compile", "fuse_dram_images", "lower", "program",
-    "register_pass", "run_fused", "select", "spec", "trace",
-    "verify_program",
+    "MachineParams", "PassManager", "PipelineReport", "Placement",
+    "PlacementError", "Prog", "ProgramFn", "ReplicatedVectorVM",
+    "RunReport", "Section", "ShardSpec", "Traced", "VerificationError",
+    "available_passes", "c", "cache_info", "clear_cache", "compile",
+    "fuse_dram_images", "lower", "place_graph", "program", "register_pass",
+    "run_fused", "select", "spec", "trace", "verify_program",
 ]

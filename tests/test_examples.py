@@ -35,3 +35,8 @@ def test_train_lm_demo():
 def test_serve_engine_demo():
     out = run_example("serve_engine.py")
     assert "OK" in out
+
+
+def test_placement_report():
+    out = run_example("placement_report.py", "--check")
+    assert "placement_report: all checks passed" in out

@@ -1,0 +1,194 @@
+"""Direct unit tests for the machine model (core/machine.py): map_graph's
+per-context resource accounting and scale_outer_parallelism's §VI-B(a)
+critical-resource scaling — over every Table III app plus synthetic graphs
+that pin the individual accounting rules."""
+import math
+
+import pytest
+
+import repro.api as revet
+from repro.apps import ALL_APPS
+from repro.core.dfg import (DFG, BodyOp, ForwardMergeHead, FwdBwdMergeHead,
+                            Output, SingleHead, SourceHead, ZipHead)
+from repro.core.machine import (MachineParams, map_graph,
+                                scale_outer_parallelism)
+
+PARAMS = MachineParams()
+
+
+def compiled_app(name):
+    app = ALL_APPS[name]()
+    return revet.compile(app.fn, **app.dram_init, **app.params,
+                         **app.statics).result
+
+
+@pytest.fixture(scope="module")
+def app_results():
+    return {name: compiled_app(name) for name in sorted(ALL_APPS)}
+
+
+# ---------------------------------------------------------------------------
+# map_graph invariants over every app
+# ---------------------------------------------------------------------------
+
+def test_totals_are_per_context_sums(app_results):
+    for name, res in app_results.items():
+        rep = map_graph(res.dfg, res.widths)
+        assert rep.cu == sum(cm.cu for cm in rep.per_context), name
+        assert rep.ag == sum(cm.ag for cm in rep.per_context), name
+        assert rep.mu_deadlock == \
+            sum(cm.mu_deadlock for cm in rep.per_context), name
+        assert rep.mu_retime == \
+            sum(cm.mu_retime for cm in rep.per_context), name
+        assert rep.mu == rep.mu_sram + rep.mu_deadlock + rep.mu_retime
+        assert rep.vec_links + rep.scal_links == len(res.dfg.links), name
+
+
+def test_per_context_cu_covers_stage_and_buffer_splits(app_results):
+    for name, res in app_results.items():
+        rep = map_graph(res.dfg, res.widths)
+        for cm in rep.per_context:
+            # a CU has `stages` pipeline stages and 4+4 input buffers;
+            # the per-context CU count must cover both split criteria
+            assert cm.cu * PARAMS.stages >= cm.stages_used, (name, cm)
+            assert cm.cu * PARAMS.vec_in_buffers >= cm.vec_buf \
+                or cm.cu * PARAMS.scal_in_buffers >= cm.scal_buf or \
+                cm.cu == 0, (name, cm)
+            assert cm.cu >= math.ceil(cm.vec_buf / PARAMS.vec_in_buffers), \
+                (name, cm)
+            assert cm.ag >= 0 and cm.mu == cm.mu_deadlock + cm.mu_retime
+
+
+def test_deadlock_mu_counts_loop_headers(app_results):
+    for name, res in app_results.items():
+        rep = map_graph(res.dfg, res.widths)
+        loops = sum(1 for c in res.dfg.contexts.values()
+                    if isinstance(c.head, FwdBwdMergeHead))
+        assert rep.mu_deadlock == loops, name
+        by_ctx = {cm.ctx_id: cm for cm in rep.per_context}
+        for c in res.dfg.contexts.values():
+            want = 1 if isinstance(c.head, FwdBwdMergeHead) else 0
+            assert by_ctx[c.id].mu_deadlock == want, (name, c.name)
+
+
+def test_packing_savings_accounting(app_results):
+    for name, res in app_results.items():
+        packed = map_graph(res.dfg, res.widths, packing=True)
+        unpacked = map_graph(res.dfg, res.widths, packing=False)
+        assert packed.packed_words_saved >= 0, name
+        assert unpacked.packed_words_saved == 0, name
+        # packing can only shrink input-buffer pressure, hence CU splits
+        by_packed = {cm.ctx_id: cm for cm in packed.per_context}
+        for cm in unpacked.per_context:
+            assert by_packed[cm.ctx_id].vec_buf <= cm.vec_buf, (name, cm)
+        assert packed.cu <= unpacked.cu, name
+
+
+# ---------------------------------------------------------------------------
+# synthetic graphs pinning individual rules
+# ---------------------------------------------------------------------------
+
+def test_buffer_split_cu_count_and_packing_interaction():
+    g = DFG()
+    src = g.new_context("src", SourceHead())
+    vars_a = tuple(f"a{i}" for i in range(6))
+    vars_b = tuple(f"b{i}" for i in range(6))
+    la = g.new_link(vars_a, 0)
+    lb = g.new_link(vars_b, 0)
+    g.attach_out(src, Output(la.id, values=vars_a))
+    g.attach_out(src, Output(lb.id, values=vars_b))
+    g.new_context("zip", ZipHead([la.id, lb.id]))
+
+    rep = map_graph(g, packing=False)
+    zm = next(cm for cm in rep.per_context if cm.name == "zip")
+    # 12 unpacked vector words / 4 input buffers per CU -> 3 CUs
+    assert zm.vec_buf == 12
+    assert zm.cu == 3
+
+    widths = {v: 8 for v in vars_a + vars_b}
+    rep_packed = map_graph(g, widths, packing=True)
+    zp = next(cm for cm in rep_packed.per_context if cm.name == "zip")
+    # ceil(6*8/32) = 2 words per link -> 4 words -> one CU suffices
+    assert zp.vec_buf == 4
+    assert zp.cu == 1
+    assert rep_packed.packed_words_saved == 2 * (6 - 2)
+
+
+def test_retiming_mu_from_path_imbalance():
+    g = DFG()
+    s = g.new_context("s", SourceHead())
+    l1 = g.new_link(("x",), 0)
+    g.attach_out(s, Output(l1.id, values=("x",)))
+    a = g.new_context("a", SingleHead(l1.id))
+    l2 = g.new_link(("x",), 0)
+    g.attach_out(a, Output(l2.id, values=("x",)))
+    b = g.new_context("b", SingleHead(l2.id))
+    lm1 = g.new_link(("x",), 0)
+    lm2 = g.new_link(("x",), 0)
+    g.attach_out(b, Output(lm1.id, values=("x",)))
+    g.attach_out(s, Output(lm2.id, values=("x",)))
+    g.new_context("m", ForwardMergeHead(lm1.id, lm2.id))
+
+    rep = map_graph(g)
+    # paths s->a->b->m (depth 3) vs s->m (depth 1): imbalance 2 -> 1 MU
+    assert rep.mu_retime == 1
+    mm = next(cm for cm in rep.per_context if cm.name == "m")
+    assert mm.mu_retime == 1
+
+
+def test_stage_split_cu_count():
+    g = DFG()
+    s = g.new_context("s", SourceHead())
+    l1 = g.new_link(("x",), 0)
+    g.attach_out(s, Output(l1.id, values=("x",)))
+    c = g.new_context("busy", SingleHead(l1.id))
+    for i in range(13):
+        c.body.append(BodyOp("add", f"t{i}", ("x", "x")))
+    rep = map_graph(g)
+    cm = next(m for m in rep.per_context if m.name == "busy")
+    # 13 element-wise ops / 6 pipeline stages -> 3 CUs
+    assert cm.stages_used == 13
+    assert cm.cu == math.ceil(13 / PARAMS.stages) == 3
+
+
+# ---------------------------------------------------------------------------
+# scale_outer_parallelism (§VI-B(a))
+# ---------------------------------------------------------------------------
+
+def test_scale_outer_parallelism_all_apps(app_results):
+    target = 0.7
+    cap = {"CU": PARAMS.n_cu, "MU": PARAMS.n_mu, "AG": PARAMS.n_ag}
+    for name, res in app_results.items():
+        rep = map_graph(res.dfg, res.widths)
+        scale = scale_outer_parallelism(rep, PARAMS, target=target)
+        outer = scale["outer"]
+        base = {"CU": max(rep.cu, 1), "MU": max(rep.mu, 1),
+                "AG": max(rep.ag, 1)}
+        assert outer >= 1, name
+        assert scale["lanes"] == outer * PARAMS.lanes, name
+        for k in cap:
+            assert scale["used"][k] == base[k] * outer, name
+            assert scale["utilization"][k] == \
+                pytest.approx(base[k] * outer / cap[k]), name
+        # critical = the resource closest to its cap at this scale
+        crit = scale["critical"]
+        assert scale["utilization"][crit] == \
+            pytest.approx(max(scale["utilization"].values())), name
+        # maximality: one more replica would overshoot the target on the
+        # binding resource (unless the floor already forced outer=1)
+        if outer > 1:
+            assert any(base[k] * (outer + 1) > target * cap[k]
+                       for k in cap), name
+        # never oversubscribe the target on the binding resource
+        assert base[crit] * outer <= max(target * cap[crit], base[crit]), name
+
+
+def test_scale_outer_parallelism_floor_and_target():
+    rep = map_graph(compiled_app("murmur3").dfg)
+    tiny = MachineParams(n_cu=8, n_mu=8, n_ag=4)
+    scale = scale_outer_parallelism(rep, tiny)
+    assert scale["outer"] == 1          # floor: never below one replica
+    # a larger target admits at least as many replicas
+    lo = scale_outer_parallelism(rep, PARAMS, target=0.35)["outer"]
+    hi = scale_outer_parallelism(rep, PARAMS, target=0.7)["outer"]
+    assert 1 <= lo <= hi

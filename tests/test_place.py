@@ -1,0 +1,306 @@
+"""Placement-stage coverage (core/place.py + the replicated executor):
+every app placed under default and deliberately tiny machines,
+replicated-vs-unreplicated bit-identity on both backends, Placement
+round-trips through the compile cache, and the single-large-request
+element-range sharding path."""
+import collections
+
+import numpy as np
+import pytest
+
+import repro.api as revet
+from repro.apps import ALL_APPS
+from repro.core.compiler import CompileOptions
+from repro.core.machine import MachineParams
+from repro.core.place import Placement, PlacementError, place_graph
+from repro.core.vector_vm import LANE_STATS, VLEN, ReplicatedVectorVM
+
+TINY = MachineParams(n_cu=8, n_mu=8, n_ag=4)
+
+
+def compiled_app(name, backend="numpy", **opt_kw):
+    app = ALL_APPS[name]()
+    opts = CompileOptions(place=True, **opt_kw)
+    compiled = revet.compile(app.fn, **app.dram_init, **app.params,
+                             **app.statics, options=opts, backend=backend)
+    return app, compiled
+
+
+def batch_requests(app, n):
+    return [(dict(app.dram_init), dict(app.params))] * n
+
+
+# ---------------------------------------------------------------------------
+# placement structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_default_placement_every_app(name):
+    app, compiled = compiled_app(name)
+    pl = compiled.placement
+    assert isinstance(pl, Placement)
+    pl.validate(compiled.result.dfg)          # partition + capacity checks
+    assert pl.n_sections == 1                 # Table II machine fits them all
+    assert pl.replicas >= 1
+    assert pl.critical in ("CU", "MU", "AG")
+    t = pl.totals()
+    assert t["CU"] == pl.report.cu and t["MU"] == pl.report.mu
+    # the report is printable and mentions the replica count
+    assert f"replicas: {pl.replicas}" in pl.table(name)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_APPS))
+def test_tiny_machine_forces_sections(name):
+    app, compiled = compiled_app(name, machine=TINY)
+    pl = compiled.placement
+    pl.validate(compiled.result.dfg)
+    assert pl.params == TINY
+    if pl.report.cu > TINY.n_cu:
+        assert pl.n_sections > 1, name        # graph cannot fit at once
+        assert pl.replicas == 1               # oversubscribed -> no replicas
+    for s in pl.sections:
+        assert s.cu <= TINY.n_cu and s.mu <= TINY.n_mu and s.ag <= TINY.n_ag
+
+
+def test_replication_appears_on_default_machine():
+    replicas = {}
+    for name in sorted(ALL_APPS):
+        _, compiled = compiled_app(name)
+        replicas[name] = compiled.placement.replicas
+    assert any(r >= 2 for r in replicas.values()), replicas
+
+
+def test_unplaceable_context_raises():
+    app = ALL_APPS["murmur3"]()
+    lowered = app.fn.lower(**app.dram_init, **app.params, **app.statics)
+    with pytest.raises(PlacementError):
+        place_graph(lowered.result.dfg, lowered.result.widths,
+                    MachineParams(n_cu=1, n_mu=1, n_ag=0, stages=1))
+
+
+def test_place_graph_direct_matches_compile_stage():
+    app, compiled = compiled_app("strlen")
+    direct = place_graph(compiled.result.dfg, compiled.result.widths)
+    assert direct.as_dict() == compiled.placement.as_dict()
+
+
+# ---------------------------------------------------------------------------
+# compile-cache round trip
+# ---------------------------------------------------------------------------
+
+def test_placement_cache_roundtrip():
+    app = ALL_APPS["isipv4"]()
+    fn = app.fn
+    fn.clear_cache()
+    kw = dict(**app.dram_init, **app.params, **app.statics)
+
+    c1 = revet.compile(fn, **kw, options=CompileOptions(place=True))
+    m1 = fn.cache_info().misses
+    c2 = revet.compile(fn, **kw, options=CompileOptions(place=True))
+    assert c2 is c1                            # same machine -> hit
+    assert fn.cache_info().misses == m1
+
+    c3 = revet.compile(fn, **kw,
+                       options=CompileOptions(place=True, machine=TINY))
+    assert c3 is not c1                        # different machine -> miss
+    assert fn.cache_info().misses == m1 + 1
+    assert c3.placement.params == TINY
+
+    c4 = revet.compile(fn, **kw, options=CompileOptions(
+        place=True, place_target=0.5))
+    assert c4 is not c1                        # different target -> miss
+
+    c5 = revet.compile(fn, **kw)               # no place stage -> miss,
+    assert c5 is not c1                        # and no placement attached
+    assert c5.placement is None
+    # the placed entry still hits afterwards
+    assert revet.compile(fn, **kw, options=CompileOptions(place=True)) is c1
+
+
+def test_pipeline_spec_place_stage():
+    opts = CompileOptions(place=True)
+    assert opts.pipeline_spec().endswith(",place")
+    assert opts.wants_place()
+    explicit = CompileOptions(pipeline="lower-memory-sugar,insert-frees,"
+                                       "eliminate-hierarchy,place")
+    assert explicit.wants_place()
+    assert not CompileOptions().wants_place()
+
+
+# ---------------------------------------------------------------------------
+# replicated execution: bit-identity + accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,batch,replicas", [
+    ("murmur3", 5, 2), ("murmur3", 4, 4), ("isipv4", 5, 3),
+    ("hash_table", 4, 2), ("strlen", 3, 2), ("search", 4, 2),
+])
+def test_replicated_bit_identity_numpy(name, batch, replicas):
+    app, compiled = compiled_app(name)
+    reqs = batch_requests(app, batch)
+    base = compiled.execute_batch(reqs, replicas=1)
+    repl = compiled.execute_batch(reqs, replicas=replicas)
+    assert isinstance(repl.vm, ReplicatedVectorVM)
+    assert repl.vm.vlen == replicas * VLEN
+    for eb, er in zip(base, repl):
+        for k in eb.dram:
+            np.testing.assert_array_equal(eb.dram[k], er.dram[k])
+    for r in range(batch):
+        assert base.vm.request_stats(r) == repl.vm.request_stats(r)
+
+
+@pytest.mark.parametrize("name", ["murmur3", "isipv4"])
+def test_replicated_bit_identity_jax(name):
+    app, compiled = compiled_app(name, backend="jax")
+    reqs = batch_requests(app, 4)
+    base = compiled.execute_batch(reqs, replicas=1)
+    repl = compiled.execute_batch(reqs, replicas=3)
+    for eb, er in zip(base, repl):
+        for k in eb.dram:
+            np.testing.assert_array_equal(eb.dram[k], er.dram[k])
+    for r in range(4):
+        assert base.vm.request_stats(r) == repl.vm.request_stats(r)
+
+
+def test_placement_drives_default_replicas():
+    app, compiled = compiled_app("murmur3")
+    want = compiled.placement.replicas
+    assert compiled.default_replicas() == want
+    bx = compiled.execute_batch(batch_requests(app, 4))
+    if want >= 2:
+        assert isinstance(bx.vm, ReplicatedVectorVM)
+        assert bx.vm.n_replicas == want
+    # unplaced compile keeps the PR 4 path
+    plain = revet.compile(app.fn, **app.dram_init, **app.params,
+                          **app.statics)
+    assert plain.default_replicas() == 1
+    assert not isinstance(plain.execute_batch(batch_requests(app, 2)).vm,
+                          ReplicatedVectorVM)
+
+
+def test_replica_sharding_and_stat_aggregation():
+    app, compiled = compiled_app("murmur3")
+    batch, R = 7, 3
+    bx = compiled.execute_batch(batch_requests(app, batch), replicas=R)
+    vm = bx.vm
+    # round-robin request -> replica map, batch-invariant
+    for rid in range(batch):
+        assert vm.replica_of(rid) == rid % R
+        assert rid in vm.replica_requests(rid % R)
+    # replica lane stats aggregate their requests' stats, and the replica
+    # aggregation reproduces the launch totals restricted to LANE_STATS
+    agg = collections.Counter()
+    for r in range(R):
+        per = sum((vm.request_stats(rid)
+                   for rid in vm.replica_requests(r)), collections.Counter())
+        assert vm.replica_stats(r) == per
+        agg.update(per)
+    for key in LANE_STATS:
+        assert agg.get(key, 0) == vm.stats.get(key, 0)
+    assert sum(vm.replica_cycles(r) > 0 for r in range(R)) == R
+    with pytest.raises(IndexError):
+        vm.replica_stats(R)
+
+
+# ---------------------------------------------------------------------------
+# single-large-request element-range sharding
+# ---------------------------------------------------------------------------
+
+def test_execute_sharded_murmur3_bit_identity():
+    app, compiled = compiled_app("murmur3")
+    sh = revet.ShardSpec(count="count",
+                         arrays={"blobs": app.statics["blob_words"],
+                                 "hashes": 1})
+    full = compiled.execute(dict(app.dram_init), dict(app.params))
+    for replicas in (2, 4):
+        part = compiled.execute_sharded(dict(app.dram_init),
+                                        dict(app.params), shard=sh,
+                                        replicas=replicas)
+        np.testing.assert_array_equal(full.dram["hashes"],
+                                      part.dram["hashes"])
+        np.testing.assert_array_equal(full.outputs[0], part.outputs[0])
+
+
+def test_execute_sharded_strlen_alignment():
+    app, compiled = compiled_app("strlen")
+    tile = app.statics["tile"]
+    sh = revet.ShardSpec(count="count",
+                         arrays={"offsets": 1, "lengths": 1}, align=tile)
+    full = compiled.execute(dict(app.dram_init), dict(app.params))
+    part = compiled.execute_sharded(dict(app.dram_init), dict(app.params),
+                                    shard=sh, replicas=4)
+    np.testing.assert_array_equal(full.dram["lengths"],
+                                  part.dram["lengths"])
+
+
+def test_execute_sharded_rejects_nonoutput_writes():
+    @revet.program(name="sharded_scribbler", outputs={"out": "src"})
+    def scribbler(b, src, scratch, out, *, count):
+        with b.foreach(count) as (t, i):
+            v = t.let(t.dram_load(src, i))
+            t.dram_store(scratch, i, v)        # non-output write
+            t.dram_store(out, i, v + 1)
+
+    src = np.arange(8, dtype=np.int64)
+    compiled = revet.compile(scribbler, src, np.zeros(8, np.int64), count=8,
+                             options=CompileOptions(place=True))
+    sh = revet.ShardSpec(count="count", arrays={"src": 1, "out": 1})
+    with pytest.raises(ValueError, match="non-output DRAM"):
+        compiled.execute_sharded({"src": src,
+                                  "scratch": np.zeros(8, np.int64)},
+                                 {"count": 8}, shard=sh)
+
+
+def test_execute_sharded_rejects_unmergeable_outputs():
+    app, compiled = compiled_app("murmur3")
+    with pytest.raises(ValueError, match="cannot be reassembled"):
+        compiled.execute_sharded(
+            dict(app.dram_init), dict(app.params),
+            shard=revet.ShardSpec(count="count", arrays={"blobs": 16}))
+    with pytest.raises(KeyError, match="unknown"):
+        compiled.execute_sharded(
+            dict(app.dram_init), dict(app.params),
+            shard=revet.ShardSpec(count="count",
+                                  arrays={"hashes": 1, "nope": 1}))
+
+
+# ---------------------------------------------------------------------------
+# serving through the placed path
+# ---------------------------------------------------------------------------
+
+def test_engine_shards_queue_across_replicas():
+    from repro.serve.dataflow import DataflowEngine, DataflowRequest
+    app, compiled = compiled_app("isipv4")
+    eng = DataflowEngine(compiled, replicas=3)
+    seq = DataflowEngine(compiled, replicas=1)
+    for rid in range(5):
+        req = DataflowRequest(rid, dict(app.params), dict(app.dram_init))
+        eng.submit(req)
+        seq.submit(req)
+    got = eng.step_batch(max_batch=8)
+    want = [seq.step() for _ in range(5)]
+    assert len(got) == 5
+    for a, b in zip(got, want):
+        for k in a.dram:
+            np.testing.assert_array_equal(a.dram[k], b.dram[k])
+
+
+def test_engine_bucket_padding_responses():
+    from repro.serve.dataflow import DataflowEngine, DataflowRequest
+    app, compiled = compiled_app("murmur3")
+    eng = DataflowEngine(compiled, bucket_sizes=(1, 4, 8))
+    assert eng._bucket(3) == 4 and eng._bucket(9) == 9
+    seq = DataflowEngine(compiled, bucket_sizes=None)
+    for rid in range(3):
+        req = DataflowRequest(rid, dict(app.params), dict(app.dram_init))
+        eng.submit(req)
+        seq.submit(req)
+    got = eng.step_batch(max_batch=8)      # pads 3 -> 4, drops the pad
+    assert len(got) == 3 and not eng.queue
+    want = [seq.step() for _ in range(3)]
+    for a, b in zip(got, want):
+        for k in a.dram:
+            np.testing.assert_array_equal(a.dram[k], b.dram[k])
+    assert eng.warmup(DataflowRequest(99, dict(app.params),
+                                      dict(app.dram_init))) == [1, 4, 8]
+    assert len(eng.done) == 3              # warmup leaves no responses
