@@ -1,69 +1,20 @@
 """Backend benchmarks.
 
-* ``vectorvm_backends`` — times every app on the numpy and jax executor
-  backends, verifies bit-identical outputs + link-token stats, and writes
-  ``BENCH_vectorvm.json`` so the numpy-vs-jax perf trajectory is tracked
-  from PR 1 on (the jax route is XLA on CPU hosts, Pallas on TPU — the
-  ``route`` field in the JSON records which one ran).
+* ``vectorvm_backends`` — the windowed-vs-resident executor suite; lives
+  in :mod:`benchmarks.vectorvm_bench` (re-exported here for callers that
+  predate the split).
 * ``reduce_micro`` — the `_reduce_out` vectorization micro-benchmark: the
   historical per-token Python loop vs the vectorized windowed segmented
   reduction that now backs ``NumpyBackend.segment_reduce``.
 """
 from __future__ import annotations
 
-import json
-
 import numpy as np
 
-from repro.apps import ALL_APPS
-from repro.apps.common import run_app
-from repro.core.backend import (JaxBackend, segment_reduce_reference,
+from repro.core.backend import (segment_reduce_reference,
                                 segment_reduce_window_np)
 
-BENCH_JSON = "BENCH_vectorvm.json"
-
-
-def _timed_run(app, backend):
-    r = run_app(app, backend=backend)
-    return r.dram, r.vm, r.report.wall_s
-
-
-def vectorvm_backends(rows: list[dict], out_path: str = BENCH_JSON) -> None:
-    """Per-app numpy-vs-jax VectorVM timings -> rows + BENCH_vectorvm.json."""
-    jax_be = JaxBackend()            # auto route: Pallas on TPU, XLA else
-    apps = {}
-    for name in sorted(ALL_APPS):
-        app = ALL_APPS[name]()
-        out_np, vm_np, dt_np = _timed_run(app, "numpy")
-        _timed_run(app, jax_be)                 # warm the jit caches
-        out_jx, vm_jx, dt_jx = _timed_run(app, jax_be)
-        match = all(np.array_equal(out_np[k], out_jx[k]) for k in out_np) \
-            and vm_np.stats == vm_jx.stats
-        cell = {
-            "numpy_s": round(dt_np, 4),
-            "jax_s": round(dt_jx, 4),
-            "jax_over_numpy": round(dt_jx / max(dt_np, 1e-9), 2),
-            "match": bool(match),
-            "ticks": int(vm_np.stats["ticks"]),
-        }
-        apps[name] = cell
-        rows.append({"bench": "vectorvm", "name": name, **cell})
-    mismatched = sorted(n for n, c in apps.items() if not c["match"])
-    payload = {
-        "meta": {
-            "jax_backend": jax_be.name,
-            "route": jax_be.route,
-            "interpret": jax_be.interpret,
-            "note": "validation-size app instances; jax timings include "
-                    "per-window dispatch overhead (XLA on CPU hosts)",
-        },
-        "apps": apps,
-    }
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
-    assert not mismatched, \
-        f"backend outputs/stats diverged on: {mismatched} (see {out_path})"
+from .vectorvm_bench import BENCH_JSON, vectorvm_backends  # noqa: F401
 
 
 # -- _reduce_out vectorization micro-benchmark --------------------------------

@@ -160,3 +160,15 @@ def place_replication(rows: list[dict], out_path: str = BENCH_JSON) -> None:
         assert len(over) >= ACCEPT_MIN_APPS, \
             (f"acceptance: only {over} reached {ACCEPT_SPEEDUP}x "
              f"(need {ACCEPT_MIN_APPS})")
+        # ip2int R-curve regression guard: its replication speedup used to
+        # cliff past R=2 (window assembly dominating as windows widened —
+        # fixed by the pooled payload buffers in ReplicatedVectorVM); the
+        # curve must stay non-degrading, not just peak early
+        curve = apps_payload["ip2int"]["numpy"]["replicas"]
+        if "2" in curve and max(REPLICAS) >= 4:
+            at2 = curve["2"]["speedup_vs_fused"]
+            best_hi = max(c["speedup_vs_fused"] for r, c in curve.items()
+                          if int(r) >= 4)
+            assert best_hi >= 0.9 * at2, \
+                (f"ip2int replication cliff is back: best R>=4 speedup "
+                 f"{best_hi}x < 0.9 * R=2 speedup {at2}x")

@@ -3,7 +3,8 @@ the executor-backend suite.
 
     PYTHONPATH=src python -m benchmarks.run [--only table5]
     PYTHONPATH=src python -m benchmarks.run --only vectorvm   # writes
-        BENCH_vectorvm.json (per-app numpy vs jax backend timings)
+        BENCH_vectorvm.json (windowed numpy/jax vs resident executor
+        timings; see benchmarks/vectorvm_bench.py env knobs)
     PYTHONPATH=src python -m benchmarks.run --only api        # writes
         BENCH_api.json (front-end dispatch overhead vs direct VectorVM)
     PYTHONPATH=src python -m benchmarks.run --only compile    # writes
@@ -33,7 +34,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from . import (api_bench, backends, compile_bench, figures, place_bench,
-                   roofline, serve_bench, tables)
+                   roofline, serve_bench, tables, vectorvm_bench)
     benches = {
         "table3": tables.table3_apps,
         "table4": tables.table4_resources,
@@ -42,7 +43,7 @@ def main() -> None:
         "fig13": figures.fig13_hierarchy_removal,
         "fig14": figures.fig14_load_balance,
         "roofline": roofline.roofline_rows,
-        "vectorvm": backends.vectorvm_backends,
+        "vectorvm": vectorvm_bench.vectorvm_backends,
         "micro": backends.reduce_micro,
         "api": api_bench.api_dispatch,
         "compile": compile_bench.compile_pipeline,

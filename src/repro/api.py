@@ -79,7 +79,8 @@ __all__ = [
 ]
 
 # call-time keyword names claimed by the API itself (never scalar params)
-_RESERVED_KWARGS = ("options", "backend", "executor", "vm_kwargs", "pipeline")
+_RESERVED_KWARGS = ("options", "backend", "executor", "vm_kwargs",
+                    "pipeline", "execution")
 
 _NP_DTYPE = {1: "i8", 2: "i16"}  # itemsize -> DRAM dtype ("i32" otherwise)
 
@@ -215,6 +216,7 @@ class RunReport:
     lane_occupancy: float               # useful/issued lanes (vector only)
     cache_hit: Optional[bool] = None    # compile-cache outcome of this call
     rid: Optional[int] = None           # request id within a batched launch
+    execution: str = "windowed"         # "windowed" | "resident" (§9)
 
     @classmethod
     def from_vm(cls, vm, executor: str, wall_s: float,
@@ -229,7 +231,8 @@ class RunReport:
             wall_s=wall_s, stats=vm.stats,
             cycles=int(vm.estimated_cycles()) if is_vec else 0,
             lane_occupancy=vm.lane_occupancy() if is_vec else 1.0,
-            cache_hit=cache_hit)
+            cache_hit=cache_hit,
+            execution=getattr(vm, "execution", "windowed"))
 
     @classmethod
     def for_request(cls, vm, rid: int, wall_s: float) -> "RunReport":
@@ -243,7 +246,8 @@ class RunReport:
             stats=vm.request_stats(rid),
             cycles=vm.request_cycles(rid),
             lane_occupancy=vm.lane_occupancy(),
-            cache_hit=None, rid=rid)
+            cache_hit=None, rid=rid,
+            execution=getattr(vm, "execution", "windowed"))
 
 
 @dataclass
@@ -319,8 +323,32 @@ def fuse_dram_images(dfg, inits: Sequence[dict]) -> dict[str, np.ndarray]:
     return fused
 
 
+def _resident_program(result: CompileResult, backend, n_requests: int,
+                      pool_override: dict, placement, **dp_kwargs):
+    """The per-launch-shape :class:`~repro.core.device_vm.DeviceProgram`
+    cache: one jit trace per ``(n_requests, pools, ring caps)`` shape for
+    the lifetime of the ``CompileResult`` — the resident analogue of the
+    windowed path's per-window kernel cache, with one entry per *program*.
+    """
+    cache = getattr(result, "_resident_cache", None)
+    if cache is None:
+        cache = result._resident_cache = {}
+    key = (n_requests,
+           tuple(sorted(pool_override.items())),
+           tuple(sorted((dp_kwargs.get("queue_caps") or {}).items())),
+           dp_kwargs.get("max_ticks"))
+    dp = cache.get(key)
+    if dp is None:
+        dp = cache[key] = backend.compile_resident(
+            result, placement=placement, n_requests=n_requests,
+            pool_override=pool_override,
+            **{k: v for k, v in dp_kwargs.items() if v is not None})
+    return dp
+
+
 def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
               replicas: int = 1, placement=None,
+              execution: str = "windowed",
               **vm_kwargs) -> tuple[Any, float]:
     """Low-level fused launch shared by :meth:`CompiledProgram.execute_batch`
     and the serving engine's raw-``Prog`` shim: build the fused image, scale
@@ -331,7 +359,15 @@ def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
     ``replicas >= 2`` executes through the placed/replicated VM
     (:class:`~repro.core.vector_vm.ReplicatedVectorVM`): requests shard
     across R graph replicas, each contributing one ``VLEN``-lane slice of
-    every window — bit-identical outputs, R× issue width."""
+    every window — bit-identical outputs, R× issue width.
+
+    ``execution="resident"`` compiles the whole program into **one**
+    device launch (DESIGN.md §9) instead of the host superstep loop; it
+    needs a resident-capable backend (jax) and falls back to the windowed
+    path — recording the reason on ``vm.resident_fallback`` — for graph
+    constructs the fused loop cannot express yet.  The resident launch
+    already interleaves every request in one pipeline, so ``replicas`` does
+    not apply (the placement still sizes the device rings)."""
     inits = [arrays for arrays, _scalars in requests]
     params = [{k: int(v) for k, v in scalars.items()}
               for _arrays, scalars in requests]
@@ -340,6 +376,27 @@ def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
     for pname, pool in result.dfg.pools.items():
         pool_override.setdefault(pname, pool.n_bufs * nreq)
     fused = fuse_dram_images(result.dfg, inits)
+    resident_fallback = None
+    if execution not in ("windowed", "resident"):
+        raise ValueError(f"unknown execution mode {execution!r} "
+                         "(expected windowed|resident)")
+    if execution == "resident":
+        be = make_backend(backend)
+        if not be.supports_resident:
+            raise ValueError(
+                f"execution='resident': backend {be.name!r} has no "
+                "resident path (the numpy oracle stays windowed; use "
+                "backend='jax')")
+        from .core.device_vm import resident_unsupported
+        reasons = resident_unsupported(result.dfg)
+        if not reasons:
+            vm_kwargs.pop("queue_cap", None)   # host knob; rings size
+            dp = _resident_program(result, be, nreq, pool_override,
+                                   placement, **vm_kwargs)
+            t0 = time.perf_counter()
+            run = dp.run_batch(params, fused)
+            return run, time.perf_counter() - t0
+        resident_fallback = "; ".join(reasons)
     if replicas and replicas > 1:
         vm = ReplicatedVectorVM(result.dfg, fused, backend=backend,
                                 n_requests=nreq, n_replicas=replicas,
@@ -348,6 +405,7 @@ def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
     else:
         vm = VectorVM(result.dfg, fused, backend=backend, n_requests=nreq,
                       pool_override=pool_override, **vm_kwargs)
+    vm.resident_fallback = resident_fallback
     t0 = time.perf_counter()
     vm.run_batch(params)
     return vm, time.perf_counter() - t0
@@ -523,13 +581,29 @@ class CompiledProgram:
                 executor: str = "vector", cache_hit: bool | None = None,
                 require_inputs: bool = True,
                 backend: str | ExecutorBackend | None = None,
+                execution: str | None = None,
                 **vm_kwargs) -> Execution:
         self._check_request(arrays, scalars, require_inputs)
         if executor != "vector" and vm_kwargs:
             raise TypeError(f"{self.name}: VM options {sorted(vm_kwargs)} "
                             f"only apply to the vector executor, not "
                             f"{executor!r}")
+        mode = execution if execution is not None else \
+            getattr(self.result.options, "execution", "windowed")
         dram_init = {n: np.asarray(a).ravel() for n, a in arrays.items()}
+        if executor == "vector" and mode == "resident":
+            # one fused device launch (DESIGN.md §9); run_fused handles the
+            # windowed fallback for graphs the loop cannot express yet
+            vm, wall = run_fused(
+                self.result, self.backend if backend is None else backend,
+                [(dram_init, scalars)], replicas=1,
+                placement=self.placement, execution="resident", **vm_kwargs)
+            report = RunReport.from_vm(vm, "vector", wall,
+                                       cache_hit=cache_hit)
+            dram = vm.request_dram(0)
+            outputs = tuple(np.asarray(dram[n]).copy()
+                            for n, _sz, _dt in self.out_info)
+            return Execution(outputs, dram, report, vm, self)
         if executor == "vector":
             vm = VectorVM(self.result.dfg, dram_init,
                           backend=(self.backend if backend is None
@@ -556,6 +630,7 @@ class CompiledProgram:
                       require_inputs: bool = True,
                       backend: str | ExecutorBackend | None = None,
                       replicas: int | None = None,
+                      execution: str | None = None,
                       **vm_kwargs) -> "BatchExecution":
         """Serve many requests in **one** fused VectorVM launch.
 
@@ -575,7 +650,11 @@ class CompiledProgram:
         factor (1 when the program was compiled without the ``place``
         stage); ``R >= 2`` shards the batch across R graph replicas, each
         contributing one ``VLEN``-lane slice of every window; ``1`` forces
-        the unreplicated PR 4 path."""
+        the unreplicated PR 4 path.
+
+        ``execution`` overrides the compiled ``CompileOptions.execution``
+        mode: ``"resident"`` serves the whole batch as one fused device
+        launch (DESIGN.md §9; replicas do not apply there)."""
         reqs = [(dict(a or {}), dict(s or {})) for a, s in requests]
         if not reqs:
             raise ValueError(f"{self.name}: execute_batch needs at least "
@@ -583,9 +662,12 @@ class CompiledProgram:
         for arrays, scalars in reqs:
             self._check_request(arrays, scalars, require_inputs)
         r = self.default_replicas() if replicas is None else int(replicas)
+        mode = execution if execution is not None else \
+            getattr(self.result.options, "execution", "windowed")
         vm, wall = run_fused(
             self.result, self.backend if backend is None else backend,
-            reqs, replicas=r, placement=self.placement, **vm_kwargs)
+            reqs, replicas=r, placement=self.placement, execution=mode,
+            **vm_kwargs)
         executions = []
         for rid in range(len(reqs)):
             dram = vm.request_dram(rid)
@@ -722,7 +804,8 @@ class ProgramFn:
                  pools: dict[str, dict] | None = None,
                  options: CompileOptions | None = None,
                  backend: str | ExecutorBackend | None = None,
-                 pipeline: str | None = None):
+                 pipeline: str | None = None,
+                 execution: str | None = None):
         self.fn = fn
         self.name = name or fn.__name__
         self.outputs = dict(outputs)
@@ -730,6 +813,7 @@ class ProgramFn:
         self.options = options
         self.backend = backend
         self.pipeline = pipeline
+        self.execution = execution
         self.__doc__ = fn.__doc__
         self.__name__ = self.name
         self.__wrapped__ = fn
@@ -785,6 +869,8 @@ class ProgramFn:
         if pl is not None:
             pl = pl if isinstance(pl, str) else ",".join(pl)
             opts = dataclasses.replace(opts, pipeline=pl)
+        if self.execution is not None and options is None:
+            opts = dataclasses.replace(opts, execution=self.execution)
         return opts
 
     # -- binding -------------------------------------------------------------
@@ -920,6 +1006,7 @@ class ProgramFn:
     def run(self, *args, options: CompileOptions | None = None,
             backend: str | ExecutorBackend | None = None,
             executor: str = "vector", pipeline: str | None = None,
+            execution: str | None = None,
             vm_kwargs: dict | None = None, **kwargs) -> Execution:
         """Full call path returning the :class:`Execution` (outputs + DRAM +
         VM + :class:`RunReport`); ``__call__`` is this, unpacked."""
@@ -941,7 +1028,7 @@ class ProgramFn:
         be_override = backend if isinstance(backend, ExecutorBackend) else None
         return compiled.execute(arrays, scalars, executor=executor,
                                 cache_hit=hit, backend=be_override,
-                                **(vm_kwargs or {}))
+                                execution=execution, **(vm_kwargs or {}))
 
     def __call__(self, *args, **kwargs):
         return self.run(*args, **kwargs).unpacked()
@@ -975,7 +1062,8 @@ def program(fn: Callable | None = None, *, outputs: dict,
             pools: dict[str, dict] | None = None,
             options: CompileOptions | None = None,
             backend: str | ExecutorBackend | None = None,
-            pipeline: str | None = None):
+            pipeline: str | None = None,
+            execution: str | None = None):
     """Decorate a tracer function into an array-in/array-out
     :class:`ProgramFn`.
 
@@ -984,12 +1072,14 @@ def program(fn: Callable | None = None, *, outputs: dict,
     parameters that are trace-time constants; ``pools`` pre-declares SRAM
     pools (``{"default": dict(buf_words=64, n_bufs=2048)}``); ``options``,
     ``backend``, and ``pipeline`` (a textual pass-pipeline spec, see
-    DESIGN.md §6) set per-function defaults, overridable per call.
+    DESIGN.md §6) set per-function defaults, overridable per call;
+    ``execution="resident"`` makes every run of the program take the
+    one-launch device path (DESIGN.md §9, jax backends).
     """
     def wrap(f: Callable) -> ProgramFn:
         return ProgramFn(f, outputs=outputs, statics=statics, name=name,
                          pools=pools, options=options, backend=backend,
-                         pipeline=pipeline)
+                         pipeline=pipeline, execution=execution)
     return wrap(fn) if fn is not None else wrap
 
 

@@ -278,6 +278,23 @@ class ExecutorBackend:
 
     name = "abstract"
 
+    #: whether :meth:`compile_resident` is implemented — the numpy oracle
+    #: stays per-window, jax gains the fused-launch path (DESIGN.md §9)
+    supports_resident = False
+
+    # -- whole-program compile ---------------------------------------------
+    def compile_resident(self, result, placement=None, **kwargs):
+        """Compile a whole placed program into a single resident launch
+        (a ``core.device_vm.DeviceProgram``): every inter-context queue a
+        fixed-capacity device ring, the superstep schedule a jitted
+        ``while_loop`` over ticks.  ``result`` is a ``CompileResult`` (or a
+        bare DFG); ``placement`` sizes the ring capacities from the
+        link-buffer budgets.  Backends without a resident form raise —
+        callers fall back to the per-window path."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no resident execution path "
+            "(execution='resident' needs backend='jax')")
+
     # -- element-wise body windows -----------------------------------------
     def binop(self, op: str, a: np.ndarray, b: np.ndarray) -> np.ndarray:
         raise NotImplementedError
@@ -386,6 +403,15 @@ class JaxBackend(ExecutorBackend):
         self.route = route
         self.interpret = (not on_tpu) if interpret is None else bool(interpret)
         self.name = f"jax[{route}]"
+
+    supports_resident = True
+
+    def compile_resident(self, result, placement=None, **kwargs):
+        from .device_vm import DeviceProgram   # deferred: heavy jax import
+        dfg = getattr(result, "dfg", result)
+        dp = DeviceProgram(dfg, placement=placement, **kwargs)
+        dp.backend = self
+        return dp
 
     def binop(self, op, a, b):
         return self._ops.vm_binop(op, a, b)

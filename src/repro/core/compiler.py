@@ -45,6 +45,9 @@ class CompileOptions:
     subword_packing: bool = True     # §V-B(d) — affects machine accounting
     eliminate_hierarchy: bool = True # §V-A(b) — honors pragma annotations
     backend: str = "numpy"           # VectorVM executor backend (core/backend)
+    execution: str = "windowed"      # "windowed" (per-window superstep) |
+                                     # "resident" (one fused device launch,
+                                     # DESIGN.md §9; jax backends only)
     pipeline: str | None = None      # explicit pipeline spec (overrides the
                                      # booleans; see pipeline_spec())
     verify_each: bool = False        # structural verifier after every pass

@@ -1034,6 +1034,12 @@ class ReplicatedVectorVM(VectorVM):
         self.placement = placement
         self._ctx_has_alloc = {c.id: any(op.op == "alloc" for op in c.body)
                                for c in g.contexts.values()}
+        # payload scratch buffers, one per column count: at R*VLEN lanes the
+        # per-window np.empty/np.zeros in the payload seams dominates window
+        # assembly (the ip2int R-curve cliff) — every consumer of a payload
+        # copies it (queue push, backend compact), so one buffer per width
+        # can back every window
+        self._payload_bufs: dict[int, np.ndarray] = {}
 
     # -------------------------------------------------------- replica views
     def replica_of(self, rid: int) -> int:
@@ -1067,9 +1073,19 @@ class ReplicatedVectorVM(VectorVM):
              for arr in self._rid_ctx_lanes.values()), default=0)
 
     # ---------------------------------------------------------- fast payload
+    def _pooled(self, n: int, ncols: int) -> np.ndarray:
+        """A reusable ``[n, ncols]`` scratch block.  Valid until the next
+        same-width request — callers hand it straight to ``_Queue.push`` /
+        ``backend.compact``, both of which copy."""
+        buf = self._payload_bufs.get(ncols)
+        if buf is None or len(buf) < n:
+            buf = self._payload_bufs[ncols] = np.empty(
+                (max(n, self.vlen), ncols), _I64)
+        return buf[:n]
+
     def _payload(self, regs: dict[str, np.ndarray], values, n: int,
                  rid: np.ndarray) -> np.ndarray:
-        out = np.empty((n, len(values) + 1), _I64)
+        out = self._pooled(n, len(values) + 1)
         for i, v in enumerate(values):
             out[:, i] = regs[v]
         out[:, -1] = rid
@@ -1077,7 +1093,8 @@ class ReplicatedVectorVM(VectorVM):
 
     def _barrier_payload(self, n: int, nvars: int,
                          rid: np.ndarray) -> np.ndarray:
-        out = np.zeros((n, nvars), _I64)
+        out = self._pooled(n, nvars)
+        out[:, :-1] = 0
         out[:, -1] = rid
         return out
 

@@ -75,6 +75,11 @@ class DataflowEngine:
     (``None`` follows the compiled placement — see DESIGN.md §8; ``1``
     forces the unreplicated fused path).
 
+    ``execution`` selects the execution mode for every launch this engine
+    makes: ``"resident"`` serves each batch as one fused device launch
+    (DESIGN.md §9 — jax backends; replicas do not apply there), ``None``
+    follows the compiled ``CompileOptions.execution``.
+
     ``bucket_sizes`` pads each fused launch up to a small fixed set of
     ``n_requests`` sizes so a jit-compiling backend sees a *bounded* set of
     launch shapes instead of one per queue length: ``"auto"`` uses powers
@@ -91,7 +96,8 @@ class DataflowEngine:
                  backend: str | ExecutorBackend | None = None,
                  queue_cap: int = 1 << 16,
                  replicas: int | None = None,
-                 bucket_sizes: "str | tuple[int, ...] | None" = "auto"):
+                 bucket_sizes: "str | tuple[int, ...] | None" = "auto",
+                 execution: str | None = None):
         if isinstance(prog, CompiledProgram):
             if opts is not None:
                 raise TypeError(
@@ -108,6 +114,7 @@ class DataflowEngine:
             self.backend = make_backend(
                 backend if backend is not None else self.result.options.backend)
         self.replicas = replicas
+        self.execution = execution
         if bucket_sizes == "auto":
             bucket_sizes = ((1, 2, 4, 8, 16, 32, 64)
                             if self.backend.name.startswith("jax") else None)
@@ -142,9 +149,11 @@ class DataflowEngine:
         if self.compiled is not None:
             return self.compiled.execute_batch(
                 reqs, require_inputs=False, backend=self.backend,
-                replicas=replicas, queue_cap=self.queue_cap)
+                replicas=replicas, execution=self.execution,
+                queue_cap=self.queue_cap)
         return run_fused(self.result, self.backend, reqs,
-                         replicas=replicas or 1, queue_cap=self.queue_cap)
+                         replicas=replicas or 1, queue_cap=self.queue_cap,
+                         execution=self.execution or "windowed")
 
     def submit(self, req: DataflowRequest) -> None:
         self.queue.append(req)
@@ -158,7 +167,7 @@ class DataflowEngine:
             ex = self.compiled.execute(
                 dict(req.dram_init or {}), req.params,
                 require_inputs=False, backend=self.backend,
-                queue_cap=self.queue_cap)
+                execution=self.execution, queue_cap=self.queue_cap)
             dram, report = ex.dram, ex.report
         else:
             import time
