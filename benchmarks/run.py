@@ -14,6 +14,10 @@ the executor-backend suite.
     PYTHONPATH=src python -m benchmarks.run --only place      # writes
         BENCH_place.json (placement resource reports + throughput vs
         replica count; see benchmarks/place_bench.py env knobs)
+    PYTHONPATH=src python -m benchmarks.run --only traffic    # writes
+        BENCH_traffic.json (open-loop Poisson p50/p99 + goodput at an
+        SLO, async engine vs closed-loop baseline; see
+        benchmarks/traffic_bench.py env knobs)
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark cell.
 """
@@ -29,12 +33,13 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: table3,table4,table5,fig12,fig13,"
                          "fig14,roofline,vectorvm,micro,api,compile,serve,"
-                         "place")
+                         "place,traffic")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (api_bench, backends, compile_bench, figures, place_bench,
-                   roofline, serve_bench, tables, vectorvm_bench)
+                   roofline, serve_bench, tables, traffic_bench,
+                   vectorvm_bench)
     benches = {
         "table3": tables.table3_apps,
         "table4": tables.table4_resources,
@@ -49,6 +54,7 @@ def main() -> None:
         "compile": compile_bench.compile_pipeline,
         "serve": serve_bench.serve_batching,
         "place": place_bench.place_replication,
+        "traffic": traffic_bench.traffic_open_loop,
     }
     if only:
         unknown = only - set(benches)

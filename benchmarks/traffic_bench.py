@@ -1,0 +1,335 @@
+"""Open-loop Poisson traffic benchmark (``BENCH_traffic.json``).
+
+Closed-loop benchmarks (``serve_bench``) let the server set the pace: the
+next batch starts when the last one finishes, so queueing delay — the thing
+users actually feel — never shows up.  This bench drives **open-loop
+Poisson arrivals** (arrivals don't wait for departures) at multiples of
+each app's measured capacity, against two serving disciplines:
+
+* ``baseline`` — the closed-loop :class:`DataflowEngine`: submit due
+  arrivals, ``step_batch(8)`` whatever is queued, unbounded queue;
+* ``async``    — :class:`~repro.serve.async_engine.AsyncServeEngine`:
+  bounded queue with load shedding, in-flight wave admission (windowed),
+  SLO tracking, supervised launches.
+
+Per (app, backend, rate) it reports p50/p99 latency (measured from the
+*scheduled* arrival time — driver lag counts) and **goodput at a latency
+SLO**: completions under ``SLO_MULT x`` the warm batch=8 launch wall,
+per second of elapsed time.  Every completed response (both engines)
+asserts DRAM bit-identity against a solo ``execute`` of the same request.
+
+The knee is the first offered rate where the baseline's goodput drops
+below 85% of offered (the classic open-loop hockey stick), else the
+highest rate.  Acceptance (hard unless ``REVET_TRAFFIC_SOFT_ACCEPT=1``):
+at the knee the async engine's goodput >= the baseline's on >= 7/9 apps
+(numpy backend), and no request is lost (served + shed == submitted,
+zero failures) anywhere.
+
+CI regression gate (``REVET_TRAFFIC_GATE=1``, mirroring
+``REVET_VECTORVM_GATE``): before overwriting the JSON, compare each
+app's fresh numpy knee ``async_goodput_rps`` against the checked-in
+value and fail if it regressed by more than ``REVET_TRAFFIC_TOL``
+(default 1.5x — shared-runner timing headroom; bit-identity and request
+accounting are asserted exactly regardless).
+
+Env knobs: ``REVET_TRAFFIC_BACKENDS`` (default ``numpy,jax``),
+``REVET_TRAFFIC_RATE_MULTS`` (default ``0.5,1.0,2.0`` x capacity),
+``REVET_TRAFFIC_REQUESTS`` (default 64), ``REVET_TRAFFIC_SLO_MULT``
+(default 4.0), ``REVET_TRAFFIC_SEED`` (default 0),
+``REVET_TRAFFIC_MAX_HORIZON_S`` (default 8.0 — slow backends serve
+fewer requests per rate so one cell stays bounded).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+import repro.api as revet
+from repro.apps import ALL_APPS
+from repro.serve.async_engine import AsyncRequest, AsyncServeEngine
+from repro.serve.dataflow import DataflowEngine, DataflowRequest
+
+BENCH_JSON = "BENCH_traffic.json"
+BATCH = 8                     # baseline batch size == async max_wave
+ACCEPT_MIN_APPS = 7           # async >= baseline goodput at the knee ...
+KNEE_FRACTION = 0.85          # ... knee = goodput < this x offered
+
+
+def _env_floats(name: str, default: str) -> list[float]:
+    return [float(x) for x in os.environ.get(name, default).split(",") if x]
+
+
+def _percentile(lats: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(lats), q)) if lats else float("nan")
+
+
+def _poisson_schedule(n: int, rate: float, rng) -> list[float]:
+    """Arrival offsets (seconds from t0) of an open-loop Poisson process."""
+    return list(np.cumsum(rng.exponential(1.0 / rate, size=n)))
+
+
+def _check_identity(dram: dict, ref: dict, where: str,
+                    mismatched: list[str]) -> None:
+    if not all(np.array_equal(dram[k], ref[k]) for k in ref):
+        mismatched.append(where)
+
+
+def _measure_capacity(compiled, app, backend_label: str) -> float:
+    """Warm batch=8 launch wall (seconds): the service-time unit the SLO
+    and the offered rates are derived from."""
+    eng = DataflowEngine(compiled)
+    for rid in range(BATCH):
+        eng.submit(DataflowRequest(rid, dict(app.params),
+                                   dict(app.dram_init)))
+    eng.warmup()
+    best = float("inf")
+    for _ in range(2):
+        eng2 = DataflowEngine(compiled)
+        for rid in range(BATCH):
+            eng2.submit(DataflowRequest(rid, dict(app.params),
+                                        dict(app.dram_init)))
+        t0 = time.perf_counter()
+        eng2.step_batch(max_batch=BATCH)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _drive_baseline(compiled, app, sched: list[float]) -> dict:
+    """Closed-loop engine under the open-loop arrival schedule: due
+    arrivals are submitted, then whatever is queued launches as one
+    batch.  The queue is unbounded — overload turns into latency."""
+    eng = DataflowEngine(compiled)
+    n = len(sched)
+    done_at: dict[int, float] = {}
+    t0 = time.monotonic()
+    i = 0
+    while i < n or eng.queue:
+        now = time.monotonic() - t0
+        while i < n and sched[i] <= now:
+            eng.submit(DataflowRequest(i, dict(app.params),
+                                       dict(app.dram_init)))
+            i += 1
+        if eng.queue:
+            resps = eng.step_batch(max_batch=BATCH)
+            t_done = time.monotonic() - t0
+            for r in resps:
+                done_at[r.rid] = t_done
+        elif i < n:
+            time.sleep(min(max(sched[i] - (time.monotonic() - t0), 0.0),
+                           1e-3))
+    elapsed = time.monotonic() - t0
+    lats = [done_at[r] - sched[r] for r in range(n)]
+    return {"engine": eng, "latencies": lats, "elapsed": elapsed,
+            "responses": eng.done, "completed": len(done_at)}
+
+
+def _drive_async(compiled, app, sched: list[float], slo_s: float,
+                 queue_cap: int) -> dict:
+    """Async engine under the same schedule: bounded queue (sized so only
+    SLO-doomed requests shed — see caller), in-flight admission into open
+    waves."""
+    eng = AsyncServeEngine(compiled, max_wave=BATCH, queue_cap=queue_cap,
+                           slo_s=slo_s)
+    eng.warmup(dict(app.dram_init), dict(app.params))
+    n = len(sched)
+    t0 = time.monotonic()
+    i = 0
+    while i < n or eng.pending:
+        now = time.monotonic() - t0
+        while i < n and sched[i] <= now:
+            req = AsyncRequest(params=dict(app.params),
+                               dram_init=dict(app.dram_init))
+            req.sched_t = t0 + sched[i]      # scheduled arrival, abs clock
+            eng.submit(req)
+            i += 1
+        eng.pump()
+        if not eng.pending and i < n:
+            time.sleep(min(max(sched[i] - (time.monotonic() - t0), 0.0),
+                           1e-3))
+    elapsed = time.monotonic() - t0
+    lats = [r.request.done_t - r.request.sched_t
+            for r in eng.done if r.ok]
+    return {"engine": eng, "latencies": lats, "elapsed": elapsed,
+            "responses": eng.done,
+            "completed": sum(1 for r in eng.done if r.ok)}
+
+
+def _rate_cell(drive: dict, slo_s: float, offered: float, n: int) -> dict:
+    """Goodput at the SLO: the fraction of *offered* requests completing
+    within the SLO, times the offered rate — horizon-independent (an
+    elapsed-time denominator would deflate goodput by the drain tail even
+    at light load).  Shed/unfinished requests count against it."""
+    lats = drive["latencies"]
+    met = sum(1 for l in lats if l <= slo_s)
+    return {
+        "offered_rps": round(offered, 2),
+        "completed": drive["completed"],
+        "p50_s": round(_percentile(lats, 50), 5),
+        "p99_s": round(_percentile(lats, 99), 5),
+        "met_slo": met,
+        "goodput_rps": round(offered * met / max(n, 1), 2),
+        # machine-independent form (offered rate scales with the host's
+        # measured capacity, the SLO-met fraction does not) — the CI gate
+        # compares this across runners
+        "goodput_eff": round(met / max(n, 1), 4),
+        "elapsed_s": round(drive["elapsed"], 3),
+    }
+
+
+def traffic_open_loop(rows: list[dict], out_path: str = BENCH_JSON) -> None:
+    """Open-loop Poisson p50/p99 + goodput-at-SLO -> rows + BENCH_traffic.json."""
+    backends = [b.strip() for b in os.environ.get(
+        "REVET_TRAFFIC_BACKENDS", "numpy,jax").split(",") if b.strip()]
+    rate_mults = _env_floats("REVET_TRAFFIC_RATE_MULTS", "0.5,1.0,2.0")
+    n_requests = int(os.environ.get("REVET_TRAFFIC_REQUESTS", "64"))
+    slo_mult = float(os.environ.get("REVET_TRAFFIC_SLO_MULT", "4.0"))
+    seed = int(os.environ.get("REVET_TRAFFIC_SEED", "0"))
+    max_horizon = float(os.environ.get("REVET_TRAFFIC_MAX_HORIZON_S", "8.0"))
+    soft = os.environ.get("REVET_TRAFFIC_SOFT_ACCEPT") == "1"
+
+    baseline_json = {}
+    if os.environ.get("REVET_TRAFFIC_GATE") == "1" and \
+            os.path.exists(out_path):
+        with open(out_path) as f:
+            baseline_json = json.load(f).get("apps", {})
+
+    apps_payload: dict[str, dict] = {}
+    mismatched: list[str] = []
+    lost: list[str] = []
+    for name in sorted(ALL_APPS):
+        app = ALL_APPS[name]()
+        per_backend: dict[str, dict] = {}
+        for be in backends:
+            compiled = revet.compile(app.fn, **app.dram_init, **app.params,
+                                     **app.statics, backend=be)
+            ref = compiled.execute(dict(app.dram_init), app.params,
+                                   require_inputs=False).dram
+            t_launch = _measure_capacity(compiled, app, be)
+            capacity_rps = BATCH / max(t_launch, 1e-9)
+            slo_s = slo_mult * t_launch
+            # Bounded queue sized from the SLO: a request queued behind
+            # more than capacity*slo_s of work cannot meet the SLO, so
+            # shedding at that depth only drops already-doomed requests.
+            queue_cap = max(2 * BATCH, int(math.ceil(slo_mult * BATCH)))
+            rng = np.random.default_rng(seed)
+            cells = []
+            for mult in rate_mults:
+                offered = max(mult * capacity_rps, 1.0)
+                # bound one cell's horizon on slow backends: fewer
+                # requests, same offered rate (log the cut, don't hide it)
+                n = min(n_requests, max(2 * BATCH,
+                                        int(offered * max_horizon)))
+                sched = _poisson_schedule(n, offered, rng)
+                base = _drive_baseline(compiled, app, sched)
+                asy = _drive_async(compiled, app, sched, slo_s, queue_cap)
+                for r in base["responses"]:
+                    _check_identity(r.dram, ref,
+                                    f"{name}/{be}/x{mult}/baseline/"
+                                    f"{r.rid}", mismatched)
+                st = asy["engine"].stats()
+                for r in asy["responses"]:
+                    if r.ok:
+                        _check_identity(r.dram, ref,
+                                        f"{name}/{be}/x{mult}/async/"
+                                        f"{r.request.id}", mismatched)
+                if st["served"] + st["shed"] + st["failed"] \
+                        != st["submitted"] or st["failed"]:
+                    lost.append(f"{name}/{be}/x{mult}: {st}")
+                cells.append({
+                    "mult": mult,
+                    "n_requests": n,
+                    "baseline": _rate_cell(base, slo_s, offered, n),
+                    "async": {**_rate_cell(asy, slo_s, offered, n),
+                              "shed": st["shed"],
+                              "waves": st["waves"],
+                              "mid_wave_admissions":
+                                  st["mid_wave_admissions"],
+                              "queue_depth_peak": st["queue_depth_peak"]},
+                })
+            knee = next((c for c in cells
+                         if c["baseline"]["goodput_rps"]
+                         < KNEE_FRACTION * c["baseline"]["offered_rps"]),
+                        cells[-1])
+            per_backend[be] = {
+                "capacity_rps": round(capacity_rps, 2),
+                "t_launch8_s": round(t_launch, 5),
+                "slo_s": round(slo_s, 5),
+                "rates": cells,
+                "knee": {
+                    "offered_rps": knee["baseline"]["offered_rps"],
+                    "mult": knee["mult"],
+                    "baseline_goodput_rps":
+                        knee["baseline"]["goodput_rps"],
+                    "async_goodput_rps": knee["async"]["goodput_rps"],
+                    "async_goodput_eff": knee["async"]["goodput_eff"],
+                    "async_wins": bool(knee["async"]["goodput_rps"]
+                                       >= knee["baseline"]["goodput_rps"]),
+                },
+            }
+        apps_payload[name] = per_backend
+        first = per_backend[backends[0]]
+        rows.append({"bench": "traffic", "name": name,
+                     "backend": backends[0],
+                     "capacity_rps": first["capacity_rps"],
+                     "knee_mult": first["knee"]["mult"],
+                     "baseline_goodput": first["knee"]
+                         ["baseline_goodput_rps"],
+                     "async_goodput": first["knee"]["async_goodput_rps"],
+                     "async_wins": first["knee"]["async_wins"]})
+
+    gate_backend = "numpy" if "numpy" in backends else backends[0]
+    winners = sorted(n for n, pb in apps_payload.items()
+                     if pb[gate_backend]["knee"]["async_wins"])
+    payload = {
+        "meta": {
+            "backends": backends,
+            "rate_mults": rate_mults,
+            "n_requests": n_requests,
+            "slo_mult": slo_mult,
+            "seed": seed,
+            "batch": BATCH,
+            "acceptance": f"at the knee rate async goodput >= baseline on "
+                          f">= {ACCEPT_MIN_APPS}/9 apps ({gate_backend}); "
+                          "bit-identity per completed request; no request "
+                          "lost (served + shed == submitted, 0 failed)",
+            "apps_async_wins_at_knee": winners,
+            "note": "open-loop Poisson arrivals at multiples of measured "
+                    f"capacity (warm batch={BATCH} launch wall); latency "
+                    "measured from scheduled arrival; goodput = "
+                    "SLO-met completions / elapsed; baseline queue "
+                    "unbounded, async sheds beyond an SLO-sized "
+                    "queue_cap (= ceil(slo_mult * batch))",
+        },
+        "apps": apps_payload,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    assert not mismatched, \
+        f"served DRAM diverged from solo execute on: {mismatched[:10]}"
+    assert not lost, f"async engine lost requests: {lost}"
+    if not soft:
+        assert len(winners) >= ACCEPT_MIN_APPS, \
+            (f"acceptance: async goodput >= baseline at the knee only on "
+             f"{winners} ({gate_backend}; need {ACCEPT_MIN_APPS}/9)")
+    if baseline_json:
+        tol = float(os.environ.get("REVET_TRAFFIC_TOL", "1.5"))
+        regressed = []
+        for name, pb in apps_payload.items():
+            # gate on the SLO-met *fraction* at the knee, not absolute rps:
+            # offered rates scale with each runner's measured capacity, the
+            # fraction served within the SLO does not
+            old = baseline_json.get(name, {}).get(gate_backend, {}) \
+                .get("knee", {}).get("async_goodput_eff")
+            new = pb.get(gate_backend, {}).get("knee", {}) \
+                .get("async_goodput_eff")
+            if old and new is not None and new < old / tol:
+                regressed.append(f"{name}: eff {old} -> {new}")
+        assert not regressed, \
+            (f"traffic gate: async knee goodput regressed > {tol}x vs "
+             f"checked-in {out_path}: {regressed}")

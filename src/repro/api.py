@@ -59,7 +59,7 @@ from typing import Any, Callable, Optional, Sequence, Union
 
 import numpy as np
 
-from .core.backend import ExecutorBackend, make_backend
+from .core.backend import ExecutorBackend, make_backend, wrap_dram_init
 from .core.compiler import CompileOptions, CompileResult, compile_program
 from .core.golden import Golden
 from .core.lang import Prog
@@ -72,7 +72,7 @@ from .core.verifier import VerificationError, verify_program
 __all__ = [
     "ArraySpec", "BatchExecution", "CacheInfo", "CompiledProgram",
     "Execution", "Lowered", "PassManager", "PipelineReport", "ProgramFn",
-    "RunReport", "ShardSpec", "Traced", "VerificationError",
+    "RunReport", "ShardSpec", "Traced", "VerificationError", "WaveSession",
     "available_passes", "cache_info", "clear_cache", "compile",
     "fuse_dram_images", "lower", "program", "register_pass", "run_fused",
     "spec", "trace", "verify_program",
@@ -217,6 +217,8 @@ class RunReport:
     cache_hit: Optional[bool] = None    # compile-cache outcome of this call
     rid: Optional[int] = None           # request id within a batched launch
     execution: str = "windowed"         # "windowed" | "resident" (§9)
+    queue_s: Optional[float] = None     # serving: time spent queued pre-launch
+    queue_depth: Optional[int] = None   # serving: queue depth at admission
 
     @classmethod
     def from_vm(cls, vm, executor: str, wall_s: float,
@@ -288,6 +290,148 @@ class BatchExecution:
         return self.executions[i]
 
 
+class WaveSession:
+    """One **open** fused launch: requests join while the wave is running.
+
+    ``execute_batch`` fixes a wave's membership before the first superstep;
+    a session keeps the source stream open instead, so an admission
+    scheduler can push a new request's thread group into lanes freed by
+    earlier requests — the §III-B(d) forward/backedge merge applied *across
+    requests* (the in-flight batching hook PR 4's per-rid wave sessions
+    were built for).  Because the bit-identity contract is
+    schedule-independent (streams are FIFO, per-request DRAM slices are
+    disjoint), a request admitted mid-flight produces exactly the DRAM image
+    it would produce in a closed batch or solo run.
+
+    Protocol: :meth:`admit` up to ``capacity`` requests (each gets the next
+    rid, its DRAM slice initialised and its source row pushed);
+    :meth:`advance` drives supersteps cooperatively between admissions
+    (returns True when the wave is idle, i.e. waiting for more work);
+    :meth:`finish` seals the wave with the single Ω1 barrier, runs to
+    quiescence and returns a :class:`BatchExecution` over the admitted
+    requests.  Sessions run the windowed executor at R=1 — mid-flight
+    admission needs the host superstep loop (a resident launch fixes its
+    membership at trace time)."""
+
+    def __init__(self, compiled: "CompiledProgram", capacity: int = 8,
+                 backend: str | ExecutorBackend | None = None, **vm_kwargs):
+        if capacity < 1:
+            raise ValueError(f"wave capacity must be >= 1, got {capacity}")
+        self.compiled = compiled
+        self.capacity = int(capacity)
+        result = compiled.result
+        pool_override = dict(vm_kwargs.pop("pool_override", None) or {})
+        for pname, pool in result.dfg.pools.items():
+            # same back-pressure scaling as run_fused: a full wave must not
+            # starve where `capacity` sequential runs would not
+            pool_override.setdefault(pname, pool.n_bufs * self.capacity)
+        self.vm = VectorVM(result.dfg, None,
+                           backend=(compiled.backend if backend is None
+                                    else backend),
+                           n_requests=self.capacity,
+                           pool_override=pool_override, **vm_kwargs)
+        self._admitted: list[tuple[dict, dict]] = []
+        self.wall_s = 0.0       # time spent driving the wave (advance/finish)
+        self.finished = False
+
+    @property
+    def admitted(self) -> int:
+        return len(self._admitted)
+
+    @property
+    def slots_free(self) -> int:
+        return self.capacity - len(self._admitted)
+
+    @property
+    def closed(self) -> bool:
+        return self.vm.source_closed
+
+    @property
+    def ticks(self) -> int:
+        return int(self.vm.stats["ticks"])
+
+    def admit(self, arrays: dict, scalars: dict,
+              require_inputs: bool = True) -> int:
+        """Join one request to the (possibly already running) wave; returns
+        its rid within the launch."""
+        if self.finished or self.vm.source_closed:
+            raise RuntimeError(f"{self.compiled.name}: admit on a "
+                               "closed wave session")
+        if not self.slots_free:
+            raise RuntimeError(f"{self.compiled.name}: wave full "
+                               f"({self.capacity} requests)")
+        arrays = dict(arrays or {})
+        scalars = dict(scalars or {})
+        self.compiled._check_request(arrays, scalars, require_inputs)
+        dfg = self.compiled.result.dfg
+        unknown = set(arrays) - set(dfg.dram)
+        if unknown:
+            raise KeyError(f"{self.compiled.name}: unknown DRAM array(s) "
+                           f"{sorted(unknown)} (declared: "
+                           f"{sorted(dfg.dram)})")
+        rid = len(self._admitted)
+        for name, a in arrays.items():
+            d = dfg.dram[name]
+            w = wrap_dram_init(np.asarray(a, np.int64).ravel(), d.dtype)
+            if w.size > d.size:
+                raise ValueError(
+                    f"{self.compiled.name}: init for '{name}' has {w.size} "
+                    f"elements, DRAM array holds {d.size}")
+            self.vm.dram[name][rid * d.size: rid * d.size + w.size] = w
+        self.vm.admit_request(rid, {k: int(v) for k, v in scalars.items()})
+        self._admitted.append((arrays, scalars))
+        return rid
+
+    def advance(self, max_ticks: int = 32) -> bool:
+        """Drive up to ``max_ticks`` supersteps. True = wave is idle (all
+        admitted work done for now; with the source open that means it is
+        waiting for admissions, not finished)."""
+        if self.finished:
+            return True
+        t0 = time.perf_counter()
+        idle = self.vm.advance(max_ticks)
+        self.wall_s += time.perf_counter() - t0
+        return idle
+
+    def close(self) -> None:
+        """Seal the wave's membership (push the Ω1 barrier) without yet
+        draining it; further :meth:`admit` calls raise."""
+        self.vm.close_source()
+
+    def finish(self, max_ticks: int = 1_000_000) -> BatchExecution:
+        """Seal the wave and run it to quiescence; returns per-request
+        executions (de-interleaved DRAM slices + attributed reports) in
+        admission order."""
+        if self.finished:
+            raise RuntimeError(f"{self.compiled.name}: wave session "
+                               "already finished")
+        self.finished = True
+        vm = self.vm
+        if self._admitted:
+            t0 = time.perf_counter()
+            vm.finish_stream(max_ticks=max_ticks)
+            self.wall_s += time.perf_counter() - t0
+        else:
+            # nothing was admitted: don't run a barrier-only wave (reduce
+            # groups would emit init values into the unowned rid-0 slice)
+            vm.source_closed = True
+        k = max(len(self._admitted), 1)
+        executions = []
+        for rid in range(len(self._admitted)):
+            dram = vm.request_dram(rid)
+            outputs = tuple(np.asarray(dram[n]).copy()
+                            for n, _sz, _dt in self.compiled.out_info)
+            rep = RunReport(
+                executor="vector", backend=vm.backend.name,
+                wall_s=self.wall_s / k, stats=vm.request_stats(rid),
+                cycles=vm.request_cycles(rid),
+                lane_occupancy=vm.lane_occupancy(), rid=rid)
+            executions.append(Execution(outputs, dram, rep, vm,
+                                        self.compiled))
+        return BatchExecution(tuple(executions), vm,
+                              RunReport.from_vm(vm, "vector", self.wall_s))
+
+
 def fuse_dram_images(dfg, inits: Sequence[dict]) -> dict[str, np.ndarray]:
     """Concatenate per-request DRAM init images into one fused image:
     request ``r``'s values land at base offset ``r * size`` of each array
@@ -349,6 +493,7 @@ def _resident_program(result: CompileResult, backend, n_requests: int,
 def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
               replicas: int = 1, placement=None,
               execution: str = "windowed",
+              bucket_sizes=None,
               **vm_kwargs) -> tuple[Any, float]:
     """Low-level fused launch shared by :meth:`CompiledProgram.execute_batch`
     and the serving engine's raw-``Prog`` shim: build the fused image, scale
@@ -367,16 +512,22 @@ def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
     path — recording the reason on ``vm.resident_fallback`` — for graph
     constructs the fused loop cannot express yet.  The resident launch
     already interleaves every request in one pipeline, so ``replicas`` does
-    not apply (the placement still sizes the device rings)."""
+    not apply (the placement still sizes the device rings).
+
+    ``bucket_sizes`` (resident only, opt-in) pads the launch up to the next
+    configured bucket by replaying the last request into the pad slots, so
+    many batch sizes share one cached :class:`DeviceProgram` jit trace
+    instead of compiling per exact shape — the bucketed-warmup treatment the
+    windowed jax engine already has.  Pad slots do real (discarded) work, so
+    the aggregate launch stats include them; per-request slices are
+    unaffected.  ``"auto"`` selects
+    :data:`~repro.core.device_vm.RESIDENT_BUCKETS`."""
     inits = [arrays for arrays, _scalars in requests]
     params = [{k: int(v) for k, v in scalars.items()}
               for _arrays, scalars in requests]
     nreq = len(requests)
-    pool_override = dict(vm_kwargs.pop("pool_override", None) or {})
-    for pname, pool in result.dfg.pools.items():
-        pool_override.setdefault(pname, pool.n_bufs * nreq)
-    fused = fuse_dram_images(result.dfg, inits)
     resident_fallback = None
+    resident_ok = False
     if execution not in ("windowed", "resident"):
         raise ValueError(f"unknown execution mode {execution!r} "
                          "(expected windowed|resident)")
@@ -387,16 +538,29 @@ def run_fused(result: CompileResult, backend, requests: Sequence[tuple],
                 f"execution='resident': backend {be.name!r} has no "
                 "resident path (the numpy oracle stays windowed; use "
                 "backend='jax')")
-        from .core.device_vm import resident_unsupported
+        from .core.device_vm import bucket_launch_size, resident_unsupported
         reasons = resident_unsupported(result.dfg)
         if not reasons:
-            vm_kwargs.pop("queue_cap", None)   # host knob; rings size
-            dp = _resident_program(result, be, nreq, pool_override,
-                                   placement, **vm_kwargs)
-            t0 = time.perf_counter()
-            run = dp.run_batch(params, fused)
-            return run, time.perf_counter() - t0
-        resident_fallback = "; ".join(reasons)
+            resident_ok = True
+            if bucket_sizes:
+                b = bucket_launch_size(nreq, bucket_sizes)
+                if b > nreq:
+                    inits = list(inits) + [inits[-1]] * (b - nreq)
+                    params = list(params) + [params[-1]] * (b - nreq)
+                    nreq = b
+        else:
+            resident_fallback = "; ".join(reasons)
+    pool_override = dict(vm_kwargs.pop("pool_override", None) or {})
+    for pname, pool in result.dfg.pools.items():
+        pool_override.setdefault(pname, pool.n_bufs * nreq)
+    fused = fuse_dram_images(result.dfg, inits)
+    if resident_ok:
+        vm_kwargs.pop("queue_cap", None)   # host knob; rings size
+        dp = _resident_program(result, be, nreq, pool_override,
+                               placement, **vm_kwargs)
+        t0 = time.perf_counter()
+        run = dp.run_batch(params, fused)
+        return run, time.perf_counter() - t0
     if replicas and replicas > 1:
         vm = ReplicatedVectorVM(result.dfg, fused, backend=backend,
                                 n_requests=nreq, n_replicas=replicas,
@@ -680,6 +844,15 @@ class CompiledProgram:
                 vm, self))
         return BatchExecution(tuple(executions), vm,
                               RunReport.from_vm(vm, "vector", wall))
+
+    def open_session(self, capacity: int = 8,
+                     backend: str | ExecutorBackend | None = None,
+                     **vm_kwargs) -> "WaveSession":
+        """Open an in-flight batching :class:`WaveSession`: a fused launch
+        whose membership stays open, so new requests can be admitted while
+        earlier ones are already executing (the async serving engine's
+        substrate — see DESIGN.md §10)."""
+        return WaveSession(self, capacity, backend=backend, **vm_kwargs)
 
     def execute_sharded(self, arrays: dict[str, np.ndarray],
                         scalars: dict[str, int], *, shard: ShardSpec,

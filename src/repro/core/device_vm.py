@@ -81,6 +81,26 @@ def _next_pow2(n: int) -> int:
     return 1 << max(1, (int(n) - 1).bit_length())
 
 
+# Default launch-size buckets for resident execution: the same ladder the
+# windowed jax engine uses for batch-size bucketing (serve/dataflow.py), so
+# one cached DeviceProgram jit trace per bucket serves every batch size in
+# between (pad slots replay the last request; see api.run_fused).
+RESIDENT_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucket_launch_size(n: int, buckets="auto") -> int:
+    """Smallest configured bucket >= ``n`` (or ``n`` itself when it exceeds
+    every bucket).  ``buckets`` may be ``"auto"``/``True`` for
+    :data:`RESIDENT_BUCKETS` or an explicit iterable of sizes."""
+    if buckets in ("auto", True):
+        buckets = RESIDENT_BUCKETS
+    n = int(n)
+    for b in sorted(int(b) for b in buckets):
+        if b >= n:
+            return b
+    return n
+
+
 def resident_unsupported(g: DFG) -> list[str]:
     """Static reasons a DFG cannot run on the fused device loop.  Empty
     means :class:`DeviceProgram` supports it; otherwise the backend falls

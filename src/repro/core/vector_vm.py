@@ -228,6 +228,12 @@ class VectorVM:
         self.stats: collections.Counter = collections.Counter()
         self.ctx_lane_cycles: collections.Counter = collections.Counter()
         self.ctx_busy_cycles: collections.Counter = collections.Counter()
+        # open-stream serving state (admit_request/close_source): the source
+        # stays open until the closing Ω1 barrier is pushed, so new requests
+        # can join a launch already in flight (§III-B(d) applied across
+        # requests — see api.WaveSession)
+        self._order: list[Context] = list(g.contexts.values())
+        self.source_closed = False
         # per-request attribution (batched launches only; the single-request
         # path keeps its historical zero-overhead accounting)
         self._rid_counters: dict[str, np.ndarray] = {}
@@ -902,11 +908,65 @@ class VectorVM:
                                         for p in src_vars]
             rows[r, -1] = r
         self.source.push(np.zeros(len(params_list), _I64), rows)
+        return self.finish_stream(max_ticks=max_ticks)
+
+    # ----------------------------------------------------- open-stream serving
+    # The bit-identity contract (PR 4) is schedule-independent: streams are
+    # FIFO and per-request DRAM slices are disjoint, so pushing a request's
+    # source row *while the wave is already running* is just another valid
+    # schedule of the same closed batch.  These four methods expose that:
+    # an async engine admits requests one at a time into a live launch, and
+    # only the final Ω1 barrier fixes the wave's membership.
+
+    def admit_request(self, rid: int, params: dict) -> None:
+        """Push one request's ``main()`` parameter row onto the still-open
+        source stream. Its thread group starts on the next superstep, merging
+        into lanes freed by earlier requests (§III-B(d) across requests).
+        The caller owns rid assignment and must have initialised the rid's
+        DRAM slice before calling."""
+        if self.source_closed:
+            raise RuntimeError("admit_request after close_source")
+        self._check_rid(rid)
+        src_vars = getattr(self.g, "source_vars", ())
+        row = np.zeros((1, len(src_vars) + 1), _I64)
+        row[0, : len(src_vars)] = [ir.wrap32(int(params[p]))
+                                   for p in src_vars]
+        row[0, -1] = rid
+        self.source.push(np.zeros(1, _I64), row)
+
+    def close_source(self) -> None:
+        """Seal the wave: push the single Ω1 barrier that every request's
+        thread groups drain behind. After this, quiescence with tokens in
+        flight is a real deadlock rather than an idle open wave."""
+        if self.source_closed:
+            return
+        src_vars = getattr(self.g, "source_vars", ())
         self.source.push(np.ones(1, _I64),
                          np.zeros((1, len(src_vars) + 1), _I64))
-        order = list(self.g.contexts.values())
-        for tick in range(max_ticks):
-            progress = self._superstep(order)
+        self.source_closed = True
+
+    def advance(self, max_ticks: int = 1) -> bool:
+        """Drive up to ``max_ticks`` supersteps; stop early when a superstep
+        makes no progress. Returns True when the VM is idle (quiesced for
+        now — with an open source that just means it is waiting for more
+        admissions, not that it is done)."""
+        for _ in range(max_ticks):
+            progress = self._superstep(self._order)
+            self.stats["ticks"] += 1
+            if not progress:
+                return True
+        return not self._superstep_would_progress()
+
+    def _superstep_would_progress(self) -> bool:
+        return any(self._ready(ctx) for ctx in self._order)
+
+    def finish_stream(self, max_ticks: int = 1_000_000) -> dict[str, np.ndarray]:
+        """Close the source (if still open) and run the wave to quiescence.
+        Raises :class:`VectorDeadlock` on tick exhaustion or stranded tokens.
+        Returns the fused DRAM image."""
+        self.close_source()
+        for _tick in range(max_ticks):
+            progress = self._superstep(self._order)
             self.stats["ticks"] += 1
             if not progress:
                 break

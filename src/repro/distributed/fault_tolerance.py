@@ -11,6 +11,12 @@
 * :class:`PreemptionGuard` — cooperative preemption: a flag file (stand-in
   for the TPU maintenance-event signal) triggers checkpoint-and-exit at the
   next step boundary.
+* :class:`LaunchSupervisor` — the :class:`Supervisor`'s restart discipline
+  applied to *serving launches* (serve/async_engine.py): a launch is
+  stateless-in/stateless-out, so a failed attempt is replayed verbatim
+  (exactly-once without checkpoints), wall times feed a
+  :class:`StragglerMonitor`, and repeated failures of the preferred
+  (resident) mode flip the engine into degraded windowed execution.
 """
 from __future__ import annotations
 
@@ -56,6 +62,73 @@ class PreemptionGuard:
 
     def requested(self) -> bool:
         return os.path.exists(self.flag_path)
+
+
+@dataclass
+class LaunchSupervisor:
+    """Retry/degrade driver for serving launches.
+
+    ``run(attempt_fn, mode)`` calls ``attempt_fn(attempt)`` up to
+    ``max_retries + 1`` times, re-raising the last error when every attempt
+    fails.  Launches are pure functions of their request batch, so a replay
+    returns bit-identical results — the engine's retry contract.
+
+    Every failure (and every completed launch that overruns ``timeout_s``)
+    is a *strike* against its execution mode; once the ``"resident"`` mode
+    collects ``degrade_after`` strikes, :attr:`degraded` latches True and
+    the engine falls back to windowed execution (a completed-but-slow
+    launch still returns its result — the strike only steers future mode
+    choice).  Launch walls feed the :class:`StragglerMonitor`, surfacing
+    tail launches in :attr:`log` exactly like training steps.
+    """
+    max_retries: int = 2
+    degrade_after: int = 2
+    timeout_s: Optional[float] = None
+    monitor: StragglerMonitor = field(default_factory=StragglerMonitor)
+    launches: int = 0
+    retries: int = 0
+    failures: int = 0
+    mode_failures: dict = field(default_factory=dict)
+    degraded: bool = False
+    log: list[str] = field(default_factory=list)
+
+    def strike(self, mode: str, reason: str) -> bool:
+        """Record one failure/overrun against ``mode``; returns True when
+        this strike latched degraded mode."""
+        n = self.mode_failures[mode] = self.mode_failures.get(mode, 0) + 1
+        self.log.append(f"{mode} strike {n}: {reason}")
+        if mode == "resident" and not self.degraded \
+                and n >= self.degrade_after:
+            self.degraded = True
+            self.log.append(
+                f"degraded: resident -> windowed after {n} strikes")
+            return True
+        return False
+
+    def run(self, attempt_fn: Callable, mode: str = "windowed"):
+        last = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                t0 = time.monotonic()
+                out = attempt_fn(attempt)
+                dt = time.monotonic() - t0
+            except Exception as e:          # noqa: BLE001 — replay anything
+                last = e
+                self.failures += 1
+                self.strike(mode, f"attempt {attempt}: {e!r}")
+                if attempt == self.max_retries:
+                    raise
+                self.retries += 1
+                continue
+            self.launches += 1
+            if self.monitor.record(self.launches, dt):
+                self.log.append(f"straggler launch {self.launches}: "
+                                f"{dt:.3f}s")
+            if self.timeout_s is not None and dt > self.timeout_s:
+                self.strike(mode, f"launch overran timeout "
+                                  f"({dt:.3f}s > {self.timeout_s:.3f}s)")
+            return out
+        raise last                           # pragma: no cover — unreachable
 
 
 @dataclass

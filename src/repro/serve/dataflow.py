@@ -25,6 +25,7 @@ per-request lane-attributable stats (DESIGN.md §7).
 from __future__ import annotations
 
 import collections
+import time
 from dataclasses import dataclass, field
 from typing import Optional, Union
 
@@ -41,6 +42,7 @@ class DataflowRequest:
     rid: int
     params: dict[str, int]
     dram_init: Optional[dict[str, np.ndarray]] = None
+    submit_t: Optional[float] = None    # stamped by Engine.submit (monotonic)
 
 
 @dataclass
@@ -124,6 +126,13 @@ class DataflowEngine:
         self.queue: collections.deque[DataflowRequest] = collections.deque()
         self.done: list[DataflowResponse] = []
         self.agg: collections.Counter = collections.Counter()
+        # serving observability (surfaced by stats() and on each response's
+        # RunReport.queue_s/queue_depth): queue-depth watermark, total time
+        # requests spent queued, and launches by (padded) launch size
+        self.queue_depth_peak = 0
+        self.queue_s_total = 0.0
+        self.launch_counts: collections.Counter = collections.Counter()
+        self.warmup_launches = 0
 
     def _effective_replicas(self) -> int | None:
         if self.replicas is not None:
@@ -156,13 +165,26 @@ class DataflowEngine:
                          execution=self.execution or "windowed")
 
     def submit(self, req: DataflowRequest) -> None:
+        if req.submit_t is None:
+            req.submit_t = time.monotonic()
         self.queue.append(req)
+        self.queue_depth_peak = max(self.queue_depth_peak, len(self.queue))
+
+    def _note_dequeued(self, reqs: "list[DataflowRequest]") -> float:
+        """Account time-in-queue for requests just popped for a launch;
+        returns the mean queue_s of the group (stamped on their reports)."""
+        now = time.monotonic()
+        waits = [now - r.submit_t for r in reqs if r.submit_t is not None]
+        self.queue_s_total += sum(waits)
+        return sum(waits) / len(waits) if waits else 0.0
 
     def step(self) -> Optional[DataflowResponse]:
         """Serve one queued request (one full program run)."""
         if not self.queue:
             return None
         req = self.queue.popleft()
+        queue_s = self._note_dequeued([req])
+        depth = len(self.queue)
         if self.compiled is not None:
             ex = self.compiled.execute(
                 dict(req.dram_init or {}), req.params,
@@ -170,13 +192,15 @@ class DataflowEngine:
                 execution=self.execution, queue_cap=self.queue_cap)
             dram, report = ex.dram, ex.report
         else:
-            import time
             vm = VectorVM(self.result.dfg, req.dram_init,
                           queue_cap=self.queue_cap, backend=self.backend)
             t0 = time.perf_counter()
             dram = vm.run(**req.params)
             report = RunReport.from_vm(vm, "vector",
                                        time.perf_counter() - t0)
+        report.queue_s = queue_s
+        report.queue_depth = depth
+        self.launch_counts[1] += 1
         resp = DataflowResponse(req.rid, dram, report)
         self.agg.update(report.stats)
         self.done.append(resp)
@@ -195,6 +219,11 @@ class DataflowEngine:
                  for _ in range(min(max_batch, len(self.queue)))]
         if not batch:
             return []
+        now = time.monotonic()
+        waits = [now - r.submit_t if r.submit_t is not None else None
+                 for r in batch]
+        self.queue_s_total += sum(w for w in waits if w is not None)
+        depth = len(self.queue)
         reqs = [(dict(r.dram_init or {}), r.params) for r in batch]
         # bucket padding: replay the last request into the pad slots so the
         # backend sees one of a bounded set of launch shapes; pad responses
@@ -215,6 +244,10 @@ class DataflowEngine:
                                  RunReport.for_request(vm, rid, wall))
                 for rid, req in enumerate(batch)]
             launch_stats = vm.stats
+        for resp, wait in zip(responses, waits):
+            resp.report.queue_s = wait
+            resp.report.queue_depth = depth
+        self.launch_counts[len(reqs)] += 1
         # aggregate the *launch* stats once — on a padded launch this
         # includes the pad slots' replayed work, so agg records work done,
         # not just work returned (it exceeds the sum over the responses)
@@ -242,11 +275,14 @@ class DataflowEngine:
         for b in sizes:
             self._launch([(dict(request.dram_init or {}),
                            request.params)] * b, replicas)
+        self.warmup_launches += len(sizes)
         return list(sizes)
 
-    def drain(self, max_batch: int = 1) -> list[DataflowResponse]:
-        """Serve until the queue is empty — one request at a time by
-        default, or in fused batches of up to ``max_batch``."""
+    def drain(self, max_batch: int = 8) -> list[DataflowResponse]:
+        """Serve until the queue is empty, in fused batches of up to
+        ``max_batch`` (the same default as :meth:`step_batch`, so draining
+        does not silently serialize requests; pass ``max_batch=1`` for the
+        sequential one-launch-per-request path)."""
         while self.queue:
             if max_batch > 1:
                 self.step_batch(max_batch)
@@ -255,8 +291,18 @@ class DataflowEngine:
         return self.done
 
     def stats(self) -> dict:
-        return {"served": len(self.done),
+        served = len(self.done)
+        return {"served": served,
                 "backend": self.backend.name,
                 "total_wall_s": sum(r.wall_s for r in self.done),
+                "queue_depth": len(self.queue),
+                "queue_depth_peak": self.queue_depth_peak,
+                "time_in_queue_s": self.queue_s_total,
+                "time_in_queue_mean_s": (self.queue_s_total / served
+                                         if served else 0.0),
+                "launches": sum(self.launch_counts.values()),
+                "launches_by_bucket": dict(sorted(
+                    self.launch_counts.items())),
+                "warmup_launches": self.warmup_launches,
                 **{f"agg_{k}": v for k, v in self.agg.items()
                    if isinstance(k, str)}}

@@ -497,7 +497,7 @@ def test_engine_step_batch_matches_step():
         for rid in range(5):
             eng.submit(DataflowRequest(rid, dict(app.params),
                                        dict(app.dram_init)))
-    seq.drain()
+    seq.drain(max_batch=1)        # the sequential one-launch-per-request ref
     bat.drain(max_batch=3)        # two fused launches: 3 + 2
     assert [r.rid for r in bat.done] == [r.rid for r in seq.done]
     for s, b in zip(seq.done, bat.done):
